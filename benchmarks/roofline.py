@@ -1,0 +1,154 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell:
+  compute term    = HLO_FLOPs_per_device / 197 TFLOP/s
+  memory term     = HLO_bytes_per_device / 819 GB/s
+  collective term = collective_bytes_per_device / 50 GB/s
+  MODEL_FLOPS     = analytic ideal (formula below), ratio vs HLO flops.
+
+HLO flops/bytes use the depth-extrapolated values (scan bodies are counted
+once by cost_analysis; DESIGN.md §7). bytes_accessed on the CPU backend
+double-counts bf16 traffic as f32 (float normalization); we report the raw
+value and a /2 bf16-adjusted value, and use the adjusted one for the
+bottleneck call.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, Optional
+
+from repro.configs import SHAPES, get_arch, get_shape, LaneConfig
+from repro.core.api import tail_periods
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def model_flops_per_device(arch: str, shape_name: str, n_devices: int,
+                           lane: Optional[LaneConfig] = None) -> Dict[str, float]:
+    """Analytic ideal FLOPs for one step, per device (formulas in §Roofline)."""
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    lane = lane or LaneConfig()
+    N = cfg.param_count(active_only=True)
+    N_tot = cfg.param_count(active_only=False)
+    S, B = shape.seq_len, shape.global_batch
+
+    # attention context flops per token (QK^T + AV = 4 * ctx * H * Dh per layer)
+    n_attn = sum(1 for k in cfg.pattern) * 0  # computed below
+    attn_layers = [i for i in range(cfg.num_layers)
+                   if cfg.pattern[i % len(cfg.pattern)] == "attn"]
+    ctx = {"train": S / 2, "prefill": S / 2, "decode": S}[shape.kind]
+    if cfg.sliding_window:
+        ctx = min(ctx, cfg.sliding_window)
+    attn_per_tok = 4 * ctx * cfg.num_heads * cfg.head_dim * len(attn_layers)
+
+    fwd_per_tok = 2 * N + attn_per_tok
+    if shape.kind == "train":
+        k = tail_periods(cfg, lane)
+        f_tail = k / cfg.num_periods
+        if lane.lane == "full_bp":
+            mult = 3.0
+        elif lane.lane == "full_zo":
+            mult = 2.0 * lane.zo_num_probes
+        else:
+            mult = 2.0 * lane.zo_num_probes * (1.0 + f_tail)
+        tokens = B * S
+        total = mult * fwd_per_tok * tokens
+        formula = (f"{mult:.2f} x (2N + attn) x {tokens} tok "
+                   f"(N_act={N:.3e}, f_tail={f_tail:.3f})")
+    elif shape.kind == "prefill":
+        tokens = B * S
+        total = fwd_per_tok * tokens
+        formula = f"(2N + attn) x {tokens} tok"
+    else:
+        tokens = B * 1
+        total = fwd_per_tok * tokens
+        formula = f"(2N + attn(ctx={ctx:.0f})) x {tokens} tok"
+    return {"total": total, "per_device": total / n_devices,
+            "formula": formula, "params_active": N, "params_total": N_tot}
+
+
+def load_cell(arch: str, shape: str, mesh: str) -> Optional[dict]:
+    f = RESULTS / f"{arch}__{shape}__{mesh}.json"
+    if not f.exists():
+        return None
+    return json.loads(f.read_text())
+
+
+def roofline_row(arch: str, shape: str, mesh: str = "single",
+                 lane: Optional[LaneConfig] = None) -> Optional[dict]:
+    rec = load_cell(arch, shape, mesh)
+    if rec is None or rec.get("status") != "ok":
+        return {"arch": arch, "shape": shape, "mesh": mesh,
+                "status": (rec or {}).get("error", "missing")}
+    n_dev = 1
+    for v in rec["mesh_shape"].values():
+        n_dev *= v
+    cost = rec.get("extrapolated") or rec["full"]
+    flops = cost["flops"]
+    raw_bytes = cost["bytes_accessed"]
+    adj_bytes = raw_bytes / 2.0          # bf16 float-normalization artifact
+    # /2: XLA:CPU float-normalization carries bf16 payloads as f32 on the
+    # wire in the compiled HLO; a TPU build moves bf16 (verified in dumps)
+    coll = rec["full"]["collective_bytes"] / 2.0
+    t_c = flops / PEAK_FLOPS
+    t_m = adj_bytes / HBM_BW
+    t_x = coll / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    ideal = model_flops_per_device(arch, shape, n_dev, lane)
+    util = ideal["per_device"] / max(flops, 1.0)
+    # roofline fraction: ideal compute time over the achievable step time
+    t_step = max(t_c, t_m, t_x)
+    frac = (ideal["per_device"] / PEAK_FLOPS) / max(t_step, 1e-12)
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh, "status": "ok",
+        "devices": n_dev,
+        "flops_dev": flops, "bytes_dev_adj": adj_bytes,
+        "coll_bytes_dev": coll,
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "bottleneck": dom,
+        "model_flops_dev": ideal["per_device"],
+        "model_formula": ideal["formula"],
+        "useful_flops_ratio": min(util, 1.0),
+        "roofline_fraction": min(frac, 1.0),
+        "temp_bytes_dev": rec["full"]["memory"].get("temp_size_in_bytes"),
+        "arg_bytes_dev": rec["full"]["memory"].get("argument_size_in_bytes"),
+        "collectives": rec["full"].get("collectives", {}),
+        "attn_plan": rec.get("attn_plan"), "moe_plan": rec.get("moe_plan"),
+    }
+
+
+def full_table(mesh: str = "single"):
+    from repro.configs import cell_matrix
+    rows = []
+    for a, s, run, why in cell_matrix():
+        if not run:
+            rows.append({"arch": a, "shape": s, "mesh": mesh,
+                         "status": f"skipped: {why}"})
+            continue
+        r = roofline_row(a, s, mesh)
+        if r:
+            rows.append(r)
+    return rows
+
+
+def format_table(rows) -> str:
+    out = ["| arch | shape | bottleneck | t_comp | t_mem | t_coll | "
+           "MODEL/HLO | roofline |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | "
+                       f"{r['status'][:60]} |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | **{r['bottleneck']}** "
+            f"| {r['t_compute_s']*1e3:.1f}ms | {r['t_memory_s']*1e3:.1f}ms "
+            f"| {r['t_collective_s']*1e3:.1f}ms "
+            f"| {r['useful_flops_ratio']*100:.0f}% "
+            f"| {r['roofline_fraction']*100:.0f}% |")
+    return "\n".join(out)

@@ -1,0 +1,260 @@
+"""Public API: build (init, train_step, prefill_step, decode_step,
+input_specs, shardings) for any (arch, shape, lane, mesh).
+
+This is the layer the launcher, dry-run, benchmarks and examples consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import LaneConfig, ModelConfig, ShapeConfig
+from ..models import transformer as tf
+from ..models.transformer import (embed, head_logits, lm_loss, make_caches,
+                                  run_encoder, run_periods)
+from ..sharding.rules import ShardingRules
+from . import elastic
+from .elastic import TrainState
+
+
+def tail_periods(cfg: ModelConfig, lane: LaneConfig) -> int:
+    """BP-tail size in periods (>=1, < num_periods)."""
+    plen = len(cfg.pattern)
+    k = max(1, -(-lane.bp_tail_layers // plen))          # ceil
+    return min(k, cfg.num_periods - 1)
+
+
+@dataclass
+class BuiltModel:
+    cfg: ModelConfig
+    shape: ShapeConfig
+    lane: LaneConfig
+    rules: ShardingRules
+    init: Callable
+    loss_fn: Callable
+    train_step: Callable
+    prefill_step: Callable
+    decode_step: Callable
+
+    # ---- host-side helpers -------------------------------------------- #
+    def input_specs(self) -> Dict[str, jax.ShapeDtypeStruct]:
+        return build_input_specs(self.cfg, self.shape, self.lane, self.rules)
+
+    def abstract_params(self):
+        return jax.eval_shape(lambda: self.init(jax.random.key(0)))
+
+    def abstract_state(self):
+        params = self.abstract_params()
+        return TrainState(params,
+                          jax.ShapeDtypeStruct((), jnp.int32),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+    def abstract_caches(self):
+        return jax.eval_shape(
+            lambda: split_caches(
+                make_caches(self.cfg, self.shape.global_batch,
+                            self.shape.seq_len, self.rules),
+                self.cfg, self.lane))
+
+
+def split_caches(caches, cfg: ModelConfig, lane: LaneConfig):
+    k = tail_periods(cfg, lane)
+    pz = cfg.num_periods - k
+    zo_c = jax.tree.map(lambda a: a[:pz], caches)
+    bp_c = jax.tree.map(lambda a: a[pz:], caches)
+    return {"zo": zo_c, "bp": bp_c}
+
+
+def build(cfg: ModelConfig, shape: ShapeConfig, lane: LaneConfig,
+          rules: ShardingRules, remat: bool = True,
+          scan_unroll: bool = False) -> BuiltModel:
+    K = tail_periods(cfg, lane)
+    PZ = cfg.num_periods - K
+    n_img = cfg.num_image_tokens
+    dtype = jnp.dtype(cfg.dtype)
+    # ElasticZO: the ZO head is never differentiated — cut the grad chain so
+    # the head's scan saves no residuals (the paper's memory claim; Eq. 4).
+    stop_zo_grad = lane.lane != "full_bp"
+
+    # ---------------- init -------------------------------------------- #
+    def init(key):
+        params = tf.init_lm(key, cfg, max_seq=shape.seq_len, dtype=dtype)
+        periods = params.pop("periods")
+        params["periods_zo"] = jax.tree.map(lambda a: a[:PZ], periods)
+        params["periods_bp"] = jax.tree.map(lambda a: a[PZ:], periods)
+        return params
+
+    # ---------------- forward ------------------------------------------ #
+    def backbone(params, tokens, positions, mode, *, img_embeds=None,
+                 frames=None, caches=None, cache_len=None):
+        enc_out = None
+        if cfg.encoder_layers and mode != "decode":
+            enc_out = run_encoder(params, frames, cfg, rules,
+                                  unroll=scan_unroll)
+        x = embed(params, tokens, cfg, rules, positions, img_embeds)
+        cz = caches["zo"] if caches is not None else None
+        cb = caches["bp"] if caches is not None else None
+        x, ncz = run_periods(params["periods_zo"], x, cfg, rules,
+                             positions=positions, mode=mode, caches=cz,
+                             cache_len=cache_len, enc_out=enc_out,
+                             remat=remat, unroll=scan_unroll)
+        if stop_zo_grad and mode == "train":
+            x = jax.lax.stop_gradient(x)
+            if enc_out is not None:
+                enc_out = jax.lax.stop_gradient(enc_out)
+        x, ncb = run_periods(params["periods_bp"], x, cfg, rules,
+                             positions=positions, mode=mode, caches=cb,
+                             cache_len=cache_len, enc_out=enc_out,
+                             remat=remat, unroll=scan_unroll)
+        new_caches = ({"zo": ncz, "bp": ncb}
+                      if mode in ("decode", "prefill") else None)
+        return x, new_caches
+
+    # ---------------- train -------------------------------------------- #
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        B, S_tok = tokens.shape
+        S_tot = S_tok + n_img
+        positions = jnp.broadcast_to(
+            jnp.arange(S_tot, dtype=jnp.int32), (B, S_tot))
+        x, _ = backbone(params, tokens, positions, "train",
+                        img_embeds=batch.get("img"), frames=batch.get("frames"))
+        if n_img:
+            x = x[:, n_img:]
+        return lm_loss(params, x, batch["labels"], batch["mask"], cfg, rules)
+
+    paired_loss_fn = None
+    if lane.fused_probes and lane.lane == "elastic_zo":
+        from ..models.transformer import run_periods_paired
+        from . import prng, zo as zo_mod
+
+        def paired_loss(bp_part, zo_part, batch, key):
+            tokens = batch["tokens"]
+            B, S_tok = tokens.shape
+            S_tot = S_tok + n_img
+            positions = jnp.broadcast_to(
+                jnp.arange(S_tot, dtype=jnp.int32), (B, S_tot))
+            seed = prng.seed_from_key(key)
+            rest = {k: v for k, v in zo_part.items() if k != "periods_zo"}
+            rest_p = zo_mod.perturb(rest, key, lane.zo_eps)
+            rest_m = zo_mod.perturb(rest, key, -lane.zo_eps)
+            enc_pair = (None, None)
+            if cfg.encoder_layers:      # whisper: encoder stays unfused
+                enc_pair = (run_encoder(rest_p, batch["frames"], cfg, rules,
+                                        unroll=scan_unroll),
+                            run_encoder(rest_m, batch["frames"], cfg, rules,
+                                        unroll=scan_unroll))
+            xp = embed(rest_p, tokens, cfg, rules, positions,
+                       batch.get("img"))
+            xm = embed(rest_m, tokens, cfg, rules, positions,
+                       batch.get("img"))
+            periods = zo_part["periods_zo"]
+            n_per = jax.tree.leaves(periods)[0].shape[0]
+            salts = jax.tree_util.tree_map_with_path(
+                lambda p, _: zo_mod.path_salt(p, "['periods_zo']"), periods)
+            sizes = jax.tree.map(lambda a: a.size // n_per, periods)
+            xp, xm = run_periods_paired(
+                periods, (xp, xm), cfg, rules, positions=positions,
+                seed=seed, eps=lane.zo_eps, salts=salts, sizes=sizes,
+                remat=remat, unroll=scan_unroll, enc_pair=enc_pair)
+            xp = jax.lax.stop_gradient(xp)
+            xm = jax.lax.stop_gradient(xm)
+            losses = []
+            for x in (xp, xm):
+                x, _ = run_periods(bp_part["periods_bp"], x, cfg, rules,
+                                   positions=positions, mode="train",
+                                   enc_out=jax.lax.stop_gradient(enc_pair[0])
+                                   if enc_pair[0] is not None else None,
+                                   remat=remat, unroll=scan_unroll)
+                if n_img:
+                    x = x[:, n_img:]
+                losses.append(lm_loss(bp_part, x, batch["labels"],
+                                      batch["mask"], cfg, rules))
+            return losses[0], losses[1]
+
+        paired_loss_fn = paired_loss
+
+    train_step = elastic.make_elastic_step(loss_fn, lane,
+                                           paired_loss_fn=paired_loss_fn)
+
+    # ---------------- serve -------------------------------------------- #
+    def prefill_step(params, batch):
+        tokens = batch["tokens"]
+        B, S_tok = tokens.shape
+        S_tot = S_tok + n_img
+        positions = jnp.broadcast_to(
+            jnp.arange(S_tot, dtype=jnp.int32), (B, S_tot))
+        x, caches = backbone(params, tokens, positions, "prefill",
+                             img_embeds=batch.get("img"),
+                             frames=batch.get("frames"))
+        logits = head_logits(params, x[:, -1:], cfg, rules)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    def decode_step(params, tokens, caches, cache_len):
+        B = tokens.shape[0]
+        positions = jnp.broadcast_to(cache_len.astype(jnp.int32), (B, 1))
+        x, new_caches = backbone(params, tokens, positions, "decode",
+                                 caches=caches, cache_len=cache_len)
+        logits = head_logits(params, x, cfg, rules)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, new_caches
+
+    return BuiltModel(cfg, shape, lane, rules, init, loss_fn,
+                      train_step, prefill_step, decode_step)
+
+
+# ------------------------------------------------------------------ #
+# input specs (ShapeDtypeStructs; no allocation)
+# ------------------------------------------------------------------ #
+def build_input_specs(cfg: ModelConfig, shape: ShapeConfig, lane: LaneConfig,
+                      rules: ShardingRules) -> Dict[str, jax.ShapeDtypeStruct]:
+    B, S = shape.global_batch, shape.seq_len
+    n_img = cfg.num_image_tokens
+    dtype = jnp.dtype(cfg.dtype)
+    S_tok = S - n_img if shape.kind in ("train", "prefill") else S
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S_tok), jnp.int32)
+        specs["labels"] = jax.ShapeDtypeStruct((B, S_tok), jnp.int32)
+        specs["mask"] = jax.ShapeDtypeStruct((B, S_tok), jnp.float32)
+        specs["probe_mask"] = jax.ShapeDtypeStruct(
+            (lane.zo_num_probes,), jnp.float32)
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S_tok), jnp.int32)
+    else:  # decode
+        specs["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        specs["cache_len"] = jax.ShapeDtypeStruct((), jnp.int32)
+    if cfg.encoder_layers and shape.kind in ("train", "prefill"):
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), dtype)
+    if n_img and shape.kind in ("train", "prefill"):
+        specs["img"] = jax.ShapeDtypeStruct((B, n_img, cfg.d_model), dtype)
+    return specs
+
+
+def batch_shardings(specs, rules: ShardingRules):
+    """NamedShardings for the input-spec dict (None mesh -> None)."""
+    if rules.mesh is None:
+        return jax.tree.map(lambda _: None, specs)
+    out = {}
+    for k, v in specs.items():
+        if k in ("probe_mask", "cache_len"):
+            out[k] = NamedSharding(rules.mesh, P())
+        elif v.ndim == 3:
+            out[k] = NamedSharding(rules.mesh, P(rules.batch, None, None))
+        else:
+            out[k] = NamedSharding(rules.mesh, P(rules.batch, None))
+        # batch dim must divide the data axes; replicate tiny batches
+        bsize = 1
+        for a in (rules.batch or ()):
+            bsize *= rules.mesh.shape[a]
+        if v.shape and v.shape[0] % max(bsize, 1) != 0:
+            out[k] = NamedSharding(rules.mesh, P(*((None,) * v.ndim)))
+    return out

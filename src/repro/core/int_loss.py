@@ -1,0 +1,92 @@
+"""Integer-arithmetic zeroth-order gradient sign (paper §4.3, Eqs. 7-12).
+
+Given two int8 logit sets (alpha, s_alpha), (beta, s_beta) and labels, the
+loss difference L(alpha) - L(beta) is evaluated as a *sign* using only
+integer ops:
+
+  1. rescale both to the common exponent s = min(s_a, s_b)       (Eq. 8)
+  2. exp(x * 2^s) -> 2^(47274 * x * 2^(s-15))  (log2 e ~ 47274/2^15, Eq. 9)
+  3. clamp exponents into a 10-bit window below the pairwise max  (p_max-10)
+  4. B=1:  sign(sum_j 2^a~ - sum_j 2^b~)                          (Eq. 10)
+     B>1:  sign(sum_b floor(log2 sum_j 2^a~) - ...)               (Eq. 12)
+
+floor(log2 n) is computed by integer compares (a clz in spirit). The paper
+measures ~95% sign agreement with the FP32 loss difference; tests assert
+the same on random logits.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .int8 import QTensor
+
+LOG2E_Q15 = 47274          # log2(e) * 2^15
+WINDOW = 10                # 2^10 clamp window (paper: p = p_max - 10)
+
+
+def _hat_exponents(logits: QTensor, labels: jax.Array, s_common) -> jax.Array:
+    """47274 * (x_j - x_i) * 2^(s-15) as int32 per (sample, class)."""
+    x = logits.data.astype(jnp.int32)
+    shift = (logits.exp - s_common).astype(jnp.int32)       # >= 0
+    x = jax.lax.shift_left(x, shift)                        # rescale (Eq. 8)
+    xi = jnp.take_along_axis(x, labels[:, None].astype(jnp.int32), axis=-1)
+    delta = x - xi                                          # [B, C]
+    t = delta * LOG2E_Q15                                   # |delta|<=2^9ish
+    k = (15 - s_common).astype(jnp.int32)
+    # t * 2^(s-15): arithmetic shift in either direction
+    pos = jax.lax.shift_left(t, jnp.maximum(-k, 0))
+    return jnp.where(k >= 0,
+                     jax.lax.shift_right_arithmetic(t, jnp.maximum(k, 0)),
+                     pos)
+
+
+def _floor_log2(n: jax.Array, maxbits: int = 26) -> jax.Array:
+    n = jnp.maximum(n, 1)
+    b = jnp.zeros_like(n)
+    for k in range(1, maxbits):
+        b = b + (n >= (1 << k)).astype(n.dtype)
+    return b
+
+
+def pow2_scores(logits: QTensor) -> jax.Array:
+    """Integer pseudo-softmax scores 2^(x~) <= 2^10 (shared with int8 bwd)."""
+    x = logits.data.astype(jnp.int32)
+    t = (x - jnp.max(x, axis=-1, keepdims=True)) * LOG2E_Q15
+    k = (15 - logits.exp).astype(jnp.int32)
+    hat = jax.lax.shift_right_arithmetic(t, jnp.maximum(k, 0))
+    hat = jnp.where(k < 0, jax.lax.shift_left(t, jnp.maximum(-k, 0)), hat)
+    hat = jnp.clip(hat + WINDOW, 0, WINDOW)                 # window below max
+    return jax.lax.shift_left(jnp.ones_like(hat), hat) * (hat > 0)
+
+
+def int_loss_sign(alpha: QTensor, beta: QTensor,
+                  labels: jax.Array) -> jax.Array:
+    """sgn(L(alpha) - L(beta)) in {-1, 0, +1} (int32 scalar), integer-only."""
+    s = jnp.minimum(alpha.exp, beta.exp)
+    a_hat = _hat_exponents(alpha, labels, s)                # [B, C]
+    b_hat = _hat_exponents(beta, labels, s)
+    p_max = jnp.maximum(jnp.max(a_hat, axis=-1), jnp.max(b_hat, axis=-1))
+    p = (p_max - WINDOW)[:, None]
+    a_t = jnp.clip(a_hat - p, 0, WINDOW)
+    b_t = jnp.clip(b_hat - p, 0, WINDOW)
+    # keep only terms >= p (clamped-to-zero exponents may still contribute
+    # 2^0; the paper accepts this approximation)
+    A = jnp.sum(jax.lax.shift_left(jnp.ones_like(a_t), a_t), axis=-1)
+    Bv = jnp.sum(jax.lax.shift_left(jnp.ones_like(b_t), b_t), axis=-1)
+    batch = labels.shape[0]
+    if batch == 1:
+        diff = A[0] - Bv[0]                                 # Eq. 10
+    else:
+        diff = jnp.sum(_floor_log2(A) - _floor_log2(Bv))    # Eq. 12
+    return jnp.sign(diff).astype(jnp.int32)
+
+
+def float_loss(logits: QTensor, labels: jax.Array) -> jax.Array:
+    """FP32 reference CE on dequantized logits (INT8 vs INT8* comparison)."""
+    x = logits.data.astype(jnp.float32) * jnp.exp2(logits.exp.astype(jnp.float32))
+    logz = jax.nn.logsumexp(x, axis=-1)
+    ll = jnp.take_along_axis(x, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return jnp.mean(logz - ll)

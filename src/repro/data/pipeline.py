@@ -1,0 +1,89 @@
+"""Sharding-aware host data pipeline.
+
+Deterministic-by-step batches (data/synthetic.py) placed directly onto the
+mesh with the training step's input shardings, plus a one-deep host
+prefetch thread so batch generation overlaps device compute. The pipeline
+carries **no state other than the step index** — restart/elastic-remesh
+resume is a pure function of the checkpointed step (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import synthetic
+
+
+def lm_batch_fn(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0):
+    """step -> host batch dict for the LM train step."""
+    S_tok = shape.seq_len - (cfg.num_image_tokens or 0)
+
+    def fn(step: int) -> Dict[str, np.ndarray]:
+        x, y, m = synthetic.token_batch(shape.global_batch, S_tok,
+                                        cfg.vocab_size, seed=seed, step=step)
+        b: Dict[str, Any] = {"tokens": x, "labels": y, "mask": m}
+        if cfg.encoder_layers:
+            b["frames"] = np.zeros(
+                (shape.global_batch, cfg.encoder_seq, cfg.d_model),
+                np.float32)
+        if cfg.num_image_tokens:
+            b["img"] = np.zeros(
+                (shape.global_batch, cfg.num_image_tokens, cfg.d_model),
+                np.float32)
+        return b
+    return fn
+
+
+def device_put_batch(batch: Dict[str, np.ndarray], shardings=None,
+                     dtypes: Optional[Dict[str, Any]] = None):
+    out = {}
+    for k, v in batch.items():
+        dt = (dtypes or {}).get(k)
+        arr = v.astype(dt) if dt is not None else v
+        sh = None if shardings is None else shardings.get(k)
+        out[k] = jax.device_put(arr, sh) if sh is not None else jnp.asarray(arr)
+    return out
+
+
+class Prefetcher:
+    """One-deep host prefetch: generate batch t+1 while t trains.
+
+    Iteration order is driven by the caller's step indices, so a restart
+    at step k replays the identical stream.
+    """
+
+    def __init__(self, batch_fn: Callable[[int], Dict[str, np.ndarray]],
+                 start_step: int, shardings=None, dtypes=None, depth: int = 2):
+        self.batch_fn = batch_fn
+        self.shardings = shardings
+        self.dtypes = dtypes
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._next = start_step
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._next
+        while not self._stop.is_set():
+            host = self.batch_fn(step)
+            try:
+                self._q.put((step, host), timeout=0.5)
+                step += 1
+            except queue.Full:
+                continue
+
+    def get(self) -> Any:
+        step, host = self._q.get()
+        return step, device_put_batch(host, self.shardings, self.dtypes)
+
+    def close(self):
+        self._stop.set()
+        self._thread.join(timeout=2)

@@ -1,0 +1,129 @@
+"""Pallas TPU flash attention (causal / windowed), online softmax.
+
+The roofline analysis (EXPERIMENTS.md §Perf) shows that after the sharding
+fixes, the llama train cell's dominant term is HBM traffic, a large share
+of which is the [Sq, Sk] score tensor round-trips of the XLA reference
+attention. This kernel keeps scores in VMEM with the standard
+online-softmax recurrence, so attention HBM traffic drops to the q/k/v/o
+streams — the canonical flash win, adapted to TPU tiling:
+
+  * blocks are (BLOCK_Q x head_dim) / (BLOCK_K x head_dim), 128-aligned
+    for the MXU; running max/sum live in SMEM-scalar-free VMEM scratch;
+  * the kv loop is the innermost grid dim so the accumulator tile stays
+    resident (same pattern as kernels/int8_matmul.py);
+  * causal masking is index-computed per tile; fully-masked tiles are
+    skipped by the grid construction for the banded (SWA) case.
+
+Shapes: q [B, H, Sq, D], k/v [B, H, Sk, D] (head-major for clean 2D tiles;
+ops.py transposes from the model's [B, S, H, D]). fp32 accumulation.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_Q = 128
+BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale, causal, window, block_q, block_k):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+
+    s = jax.lax.dot_general(
+        q_ref[0, 0].astype(jnp.float32), k_ref[0, 0].astype(jnp.float32),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                      # [bq, bk]
+    alpha = jnp.exp(m_prev - m_new)             # rescale of old accumulator
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v_ref[0, 0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(3) - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float | None = None, interpret: bool = False):
+    """q [B,H,Sq,D], k/v [B,H,Sk,D] -> o [B,H,Sq,D].
+
+    Sq, Sk must be multiples of 128 (ops.py pads); D in {64, 128}.
+    """
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    assert Sq % BLOCK_Q == 0 and Sk % BLOCK_K == 0, (Sq, Sk)
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    grid = (B, H, Sq // BLOCK_Q, Sk // BLOCK_K)
+    kern = functools.partial(_kernel, scale=scale, causal=causal,
+                             window=window, block_q=BLOCK_Q, block_k=BLOCK_K)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, BLOCK_Q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, BLOCK_K, D), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, BLOCK_K, D), lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, BLOCK_Q, D),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((BLOCK_Q, D), jnp.float32),
+            pltpu.VMEM((BLOCK_Q, 1), jnp.float32),
+            pltpu.VMEM((BLOCK_Q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """Dense-softmax oracle, same layout."""
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

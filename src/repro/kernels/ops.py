@@ -1,0 +1,56 @@
+"""Backend dispatch for the Pallas kernels.
+
+On TPU the Pallas kernels run natively; on CPU (tests, this container's
+dry-run) the pure-jnp refs are used, with ``interpret=True`` Pallas
+execution available for correctness work. The public entry points keep one
+signature regardless of backend.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .int8_matmul import int8_matmul as _pallas_int8_matmul
+from .zo_perturb import int8_perturb as _pallas_int8_perturb
+from .zo_perturb import zo_perturb as _pallas_zo_perturb
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def int8_matmul(a, w, *, force_pallas: bool = False, interpret: bool = False):
+    """(out int32, maxabs) — Pallas on TPU, ref elsewhere."""
+    if _on_tpu() or force_pallas:
+        M, K = a.shape
+        _, N = w.shape
+        bm = min(128, M) if M % 128 else 128
+        if M % 128 or K % 128 or N % 128:
+            # pad to MXU alignment; zeros are exact in integer arithmetic
+            Mp, Kp, Np = (-(-M // 128) * 128, -(-K // 128) * 128,
+                          -(-N // 128) * 128)
+            ap = jnp.zeros((Mp, Kp), a.dtype).at[:M, :K].set(a)
+            wp = jnp.zeros((Kp, Np), w.dtype).at[:K, :N].set(w)
+            out, mx = _pallas_int8_matmul(ap, wp, interpret=interpret)
+            return out[:M, :N], mx
+        return _pallas_int8_matmul(a, w, interpret=interpret)
+    return ref.int8_matmul_ref(a, w)
+
+
+def zo_perturb(theta, seed, salt: int, scale, *, force_pallas: bool = False,
+               interpret: bool = False):
+    if _on_tpu() or force_pallas:
+        return _pallas_zo_perturb(theta, seed, salt, scale,
+                                  interpret=interpret)
+    return ref.zo_perturb_ref(theta, seed, salt, jnp.asarray(scale))
+
+
+def int8_perturb(theta, seed, salt: int, k, r_max, p_zero, *,
+                 force_pallas: bool = False, interpret: bool = False):
+    if _on_tpu() or force_pallas:
+        return _pallas_int8_perturb(theta, seed, salt, k, r_max, p_zero,
+                                    interpret=interpret)
+    return ref.int8_perturb_ref(theta, seed, salt, int(k), int(r_max), p_zero)

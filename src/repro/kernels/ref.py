@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core import prng
+
+
+def int8_matmul_ref(a: jax.Array, w: jax.Array):
+    """a [M,K] int8, w [K,N] int8 -> (out int32 [M,N], maxabs int32 scalar)."""
+    out = jax.lax.dot_general(a.astype(jnp.int32), w.astype(jnp.int32),
+                              (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    return out, jnp.max(jnp.abs(out)).astype(jnp.int32)
+
+
+def zo_perturb_ref(theta: jax.Array, seed: jax.Array, salt: int,
+                   scale: jax.Array):
+    """theta + scale * z with z = hash-gaussian over the *global* flat index
+    (bitwise-identical to core/prng.normal on the same flat layout)."""
+    flat = theta.reshape(-1)
+    z = prng.normal(seed, salt, flat.shape)
+    out = flat.astype(jnp.float32) + scale.astype(jnp.float32) * z
+    return out.reshape(theta.shape).astype(theta.dtype)
+
+
+def int8_perturb_ref(theta: jax.Array, seed: jax.Array, salt: int, k: int,
+                     r_max: int, p_zero: jax.Array):
+    """Alg. 2 perturbation on an int8 leaf (clamped +/- sparse uniform)."""
+    from ..core.int8 import int8_noise
+    z = int8_noise(seed, salt, theta.shape, r_max, p_zero)
+    return jnp.clip(theta.astype(jnp.int32) + k * z, -127, 127).astype(jnp.int8)

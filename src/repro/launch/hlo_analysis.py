@@ -1,0 +1,173 @@
+"""Post-SPMD HLO analysis: collective-byte accounting with while-loop
+trip-count awareness.
+
+``compiled.cost_analysis()`` counts while bodies once (DESIGN.md §7), so we
+parse the compiled HLO text ourselves: track which computation each
+collective lives in, recover each while's trip count from its condition
+computation's integer constant, and multiply.
+
+Byte conventions (per device, ring algorithms):
+  all-gather        out_bytes * (n-1)/n
+  all-reduce        2 * out_bytes * (n-1)/n
+  reduce-scatter    out_bytes * (n-1)
+  all-to-all        out_bytes * (n-1)/n
+  collective-permute out_bytes
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO result type (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    bytes_moved: float      # per device, trip-count-weighted
+    group: int
+    computation: str
+    trips: int
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        # computation headers are single lines: `%name (args) -> type {`
+        m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$", s)
+        if m and not s.startswith("ROOT"):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if s.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(s)
+    return comps
+
+
+def _while_info(comps: Dict[str, List[str]]) -> Dict[str, int]:
+    """Map body-computation name -> trip count (from condition constants)."""
+    body_trips: Dict[str, int] = {}
+    for lines in comps.values():
+        for s in lines:
+            if " while(" not in s:
+                continue
+            mb = re.search(r"body=%?([\w.\-]+)", s)
+            mc = re.search(r"condition=%?([\w.\-]+)", s)
+            if not mb or not mc:
+                continue
+            trips = 1
+            cond = comps.get(mc.group(1), [])
+            consts = []
+            for cl in cond:
+                for cm in re.finditer(r"constant\((\d+)\)", cl):
+                    consts.append(int(cm.group(1)))
+            if consts:
+                trips = max(consts)
+            body_trips[mb.group(1)] = max(trips, 1)
+    return body_trips
+
+
+def _callers_closure(comps, body_trips):
+    """Propagate trip counts through nested calls/whiles (one level deep
+    nesting is enough for our programs, but do a small fixpoint anyway)."""
+    # map computation -> multiplier
+    mult = defaultdict(lambda: 1)
+    for body, t in body_trips.items():
+        mult[body] = t
+    # find calls from while bodies into other computations (fusions excluded:
+    # collectives never live inside fusions)
+    for _ in range(3):
+        for name, lines in comps.items():
+            for s in lines:
+                m = re.search(r"(?:calls|body)=%?([\w.\-]+)", s)
+                if m and m.group(1) in comps and mult[name] > 1:
+                    callee = m.group(1)
+                    if callee not in body_trips:
+                        mult[callee] = max(mult[callee], mult[name])
+    return mult
+
+
+def collective_bytes(hlo: str) -> Tuple[float, List[CollectiveOp]]:
+    """Total per-device collective bytes (trip-weighted) + op list."""
+    comps = _split_computations(hlo)
+    body_trips = _while_info(comps)
+    mult = _callers_closure(comps, body_trips)
+    ops: List[CollectiveOp] = []
+    for cname, lines in comps.items():
+        trips = mult[cname]
+        for s in lines:
+            for kind in _COLLECTIVES:
+                token = f" {kind}("
+                start_token = f" {kind}-start("
+                if token not in s and start_token not in s:
+                    continue
+                # result type is on the left of ' = '
+                head = s.split(" = ")[0] if " = " in s else ""
+                body = s.split(" = ")[1] if " = " in s else s
+                out_b = _shape_bytes(body.split("(")[0])
+                n = _group_size(s)
+                if n <= 1:
+                    continue
+                if kind == "all-gather":
+                    b = out_b * (n - 1) / n
+                elif kind == "all-reduce":
+                    b = 2 * out_b * (n - 1) / n
+                elif kind == "reduce-scatter":
+                    b = out_b * (n - 1)
+                elif kind == "all-to-all":
+                    b = out_b * (n - 1) / n
+                else:
+                    b = out_b
+                ops.append(CollectiveOp(kind, b * trips, n, cname, trips))
+                break
+    total = sum(o.bytes_moved for o in ops)
+    return total, ops
+
+
+def summarize(ops: List[CollectiveOp]) -> Dict[str, Dict[str, float]]:
+    by_kind: Dict[str, Dict[str, float]] = {}
+    for o in ops:
+        d = by_kind.setdefault(o.kind, {"count": 0, "bytes": 0.0})
+        d["count"] += o.trips
+        d["bytes"] += o.bytes_moved
+    return by_kind

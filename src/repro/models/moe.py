@@ -1,0 +1,107 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Dispatch is gather/scatter-based (megablocks/MaxText-style), never
+materializing a [tokens, E, C] one-hot:
+
+  1. top-k routing -> (expert_id, gate) per slot (k slots per token)
+  2. stable argsort slots by expert id; position-in-expert via a
+     running-start cummax trick; slots beyond capacity C are dropped
+  3. expert buffers [B, E, C, D] built by batched scatter of slot ids,
+     then a gather of token vectors
+  4. batched expert SwiGLU: einsum('becd,edf->becf') — one MXU call for
+     all experts
+  5. combine: gather each slot's output row, unsort, weighted sum over k
+
+Sharding plans (rules.moe):
+  "ep": expert dim sharded over `model` (GSPMD inserts the all-to-all);
+  "tp": d_ff sharded over `model`, experts resident on every chip
+        (for E % tp != 0, e.g. mixtral 8e on tp=16).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import dense_init, subkey
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    return {
+        "router": dense_init(subkey(key, "router"), (d, E), jnp.float32),
+        "w_gate": dense_init(subkey(key, "wg"), (E, d, ff), dtype),
+        "w_up": dense_init(subkey(key, "wu"), (E, d, ff), dtype),
+        "w_down": dense_init(subkey(key, "wd"), (E, ff, d), dtype, fan_in=ff),
+    }
+
+
+def capacity(cfg: ModelConfig, S: int) -> int:
+    c = int(math.ceil(S * cfg.experts_per_token * cfg.capacity_factor
+                      / cfg.num_experts))
+    return max(c, 1)
+
+
+def moe_ffn(p, x, cfg: ModelConfig, rules):
+    """x: [B, S, D] -> [B, S, D]. Group = one sequence (capacity per seq)."""
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    C = capacity(cfg, S)
+    nslot = S * K
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_g, top_i = jax.lax.top_k(gates, K)                  # [B,S,K]
+    top_g = top_g / jnp.sum(top_g, axis=-1, keepdims=True)
+
+    slot_e = top_i.reshape(B, nslot)                        # expert per slot
+    slot_g = top_g.reshape(B, nslot)
+
+    # --- position-in-expert (per group) via stable sort ---------------- #
+    sort_idx = jnp.argsort(slot_e, axis=1, stable=True)     # [B, nslot]
+    sorted_e = jnp.take_along_axis(slot_e, sort_idx, axis=1)
+    ar = jnp.arange(nslot, dtype=jnp.int32)[None, :]
+    is_start = jnp.concatenate(
+        [jnp.ones((B, 1), bool), sorted_e[:, 1:] != sorted_e[:, :-1]], axis=1)
+    run_start = jax.lax.cummax(jnp.where(is_start, ar, 0), axis=1)
+    pos = ar - run_start                                    # position within expert
+    keep = pos < C
+    dest = sorted_e * C + jnp.where(keep, pos, 0)           # [B, nslot] in [0, E*C)
+
+    # --- build expert buffers ------------------------------------------ #
+    # inverse map: which slot fills buffer cell (e, c)?  sentinel = nslot
+    binv = jnp.full((B, E * C), nslot, dtype=jnp.int32)
+    bidx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, nslot))
+    # dropped slots are routed to an out-of-bounds column and discarded
+    binv = binv.at[bidx, jnp.where(keep, dest, E * C)].set(
+        sort_idx.astype(jnp.int32), mode="drop")
+    # token id for each slot (k slots per token, row-major reshape)
+    token_of_cell = jnp.minimum(binv // K, S - 1)
+    cell_valid = binv < nslot                               # [B, E*C]
+
+    xin = jnp.take_along_axis(x, token_of_cell[..., None], axis=1)   # [B,E*C,D]
+    xin = jnp.where(cell_valid[..., None], xin, 0).reshape(B, E, C, D)
+    if rules.moe == "ep":
+        xin = rules.wsc(xin, rules.batch_nomodel, rules.wmodel, None, None)
+
+    # --- batched expert SwiGLU ----------------------------------------- #
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xin, p["w_gate"]))
+    h = h * jnp.einsum("becd,edf->becf", xin, p["w_up"])
+    if rules.moe == "tp" and rules.model is not None:
+        h = rules.wsc(h, rules.batch, None, None, rules.model)
+    out = jnp.einsum("becf,efd->becd", h, p["w_down"]).reshape(B, E * C, D)
+    if rules.moe == "ep":
+        out = rules.wsc(out.reshape(B, E, C, D),
+                        rules.batch_nomodel, rules.wmodel,
+                        None, None).reshape(B, E * C, D)
+
+    # --- combine: slot -> token ----------------------------------------- #
+    val_sorted = jnp.take_along_axis(out, dest[..., None], axis=1)   # [B,nslot,D]
+    val_sorted = jnp.where(keep[..., None], val_sorted, 0)
+    unsort = jnp.argsort(sort_idx, axis=1)                  # inverse permutation
+    val = jnp.take_along_axis(val_sorted, unsort[..., None], axis=1)
+    val = val.reshape(B, S, K, D) * slot_g.reshape(B, S, K)[..., None].astype(val.dtype)
+    y = jnp.sum(val, axis=2)
+    return rules.act_btd(y.astype(x.dtype))

@@ -1,0 +1,83 @@
+"""PointNet classifier as the paper uses it (Fig. 1 bottom): five pointwise
+FC layers (64,64,64,128,1024) + global max-pool + 3-layer head (512,256,nc).
+No T-Nets (the paper's 816k-parameter variant). fp32 and NITI-int8 paths.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.paper_models import PointNetConfig
+from ..core.int8 import (QTensor, qdense, qglobal_maxpool, qrelu,
+                         quant_from_float)
+from .layers import dense_init, subkey
+
+FEAT = ("feat0", "feat1", "feat2", "feat3", "feat4")
+HEAD = ("head0", "head1", "cls")
+LAYER_NAMES = FEAT + HEAD
+
+
+def init_pointnet(key, cfg: PointNetConfig = PointNetConfig(),
+                  dtype=jnp.float32):
+    dims = (3,) + cfg.feat_dims
+    p = {}
+    for i in range(5):
+        p[f"feat{i}"] = {"w": dense_init(subkey(key, f"f{i}"),
+                                         (dims[i], dims[i + 1]), dtype),
+                         "b": jnp.zeros((dims[i + 1],), dtype)}
+    hdims = (cfg.feat_dims[-1],) + cfg.head_dims + (cfg.num_classes,)
+    for i, n in enumerate(HEAD):
+        p[n] = {"w": dense_init(subkey(key, n), (hdims[i], hdims[i + 1]), dtype),
+                "b": jnp.zeros((hdims[i + 1],), dtype)}
+    return p
+
+
+def pointnet_forward(params, pts):
+    """pts: [B,N,3] -> (logits [B,nc], acts)."""
+    acts = {}
+    h = pts
+    for n in FEAT:
+        h = jax.nn.relu(h @ params[n]["w"] + params[n]["b"])
+    h = jnp.max(h, axis=1)                       # global feature [B,1024]
+    for n in HEAD[:-1]:
+        acts[f"{n}_in"] = h
+        h = jax.nn.relu(h @ params[n]["w"] + params[n]["b"])
+    acts["cls_in"] = h
+    logits = h @ params["cls"]["w"] + params["cls"]["b"]
+    return logits, acts
+
+
+def pointnet_loss(params, batch):
+    logits, _ = pointnet_forward(params, batch["x"])
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - ll)
+
+
+def partition_at(params: Dict, c: int):
+    zo = {n: params[n] for n in LAYER_NAMES[:c]}
+    bp = {n: params[n] for n in LAYER_NAMES[c:]}
+    return zo, bp
+
+
+# ------------------------------------------------------------------ #
+def init_pointnet_int8(key, cfg: PointNetConfig = PointNetConfig()):
+    fp = init_pointnet(key, cfg)
+    return {n: {"w": quant_from_float(fp[n]["w"], bits=6)}
+            for n in LAYER_NAMES}
+
+
+def pointnet_forward_int8(params, pts: QTensor):
+    acts = {}
+    h = pts
+    for n in FEAT:
+        h = qrelu(qdense(h, params[n]["w"]))
+    h = qglobal_maxpool(h, axis=1)
+    for n in HEAD[:-1]:
+        acts[f"{n}_in"] = h
+        h = qrelu(qdense(h, params[n]["w"]))
+    acts["cls_in"] = h
+    logits = qdense(h, params["cls"]["w"])
+    return logits, acts

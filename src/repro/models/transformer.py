@@ -1,0 +1,351 @@
+"""LM stacks: decoder-only (dense/MoE/SSM/hybrid), enc-dec (Whisper), VLM.
+
+Layout: params = {embed, periods (stacked, leading dim = num_periods),
+final_norm, unembed [, pos_embed, encoder]}. The layer stack runs as a
+``lax.scan`` over periods; a period is one repetition of
+``cfg.block_pattern`` (1 layer for uniform archs, 8 for Jamba). Caches ride
+the scan as xs/ys. DESIGN.md §7 explains the cost-extrapolation contract:
+the scan body is identical at any depth, so the dry-run can compile
+depth-2/depth-4 variants to recover exact per-layer costs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ATTN, MAMBA, RWKV, ModelConfig
+from .layers import (attention, dense_init, init_attention, init_mlp, mlp,
+                     rms_norm, subkey)
+from .moe import init_moe, moe_ffn
+from .ssm import (init_mamba_block, init_mamba_state, init_rwkv_block,
+                  init_rwkv_state, mamba_block, rwkv_block)
+
+CE_CHUNKS = 4            # sequence chunks for the cross-entropy epilogue
+
+
+# --------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------- #
+def _ffn_is_moe(cfg: ModelConfig, pos_in_period: int) -> bool:
+    return cfg.is_moe and (pos_in_period % cfg.moe_every == cfg.moe_offset)
+
+
+def init_block(key, cfg: ModelConfig, kind: str, pos: int, dtype,
+               cross_attn: bool = False):
+    d = cfg.d_model
+    if kind == RWKV:
+        return {"rwkv": init_rwkv_block(subkey(key, "rwkv"), cfg, dtype)}
+    p: Dict[str, Any] = {}
+    if kind == ATTN:
+        p["ln_attn"] = jnp.ones((d,), dtype)
+        p["attn"] = init_attention(subkey(key, "attn"), cfg, dtype)
+        if cross_attn:
+            p["ln_cross"] = jnp.ones((d,), dtype)
+            p["cross"] = init_attention(subkey(key, "cross"), cfg, dtype)
+    else:  # MAMBA
+        p["mamba"] = init_mamba_block(subkey(key, "mamba"), cfg, dtype)
+    p["ln_ffn"] = jnp.ones((d,), dtype)
+    if _ffn_is_moe(cfg, pos):
+        p["moe"] = init_moe(subkey(key, "moe"), cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(subkey(key, "mlp"), d, cfg.d_ff, dtype)
+    return p
+
+
+def init_period(key, cfg: ModelConfig, dtype, cross_attn=False):
+    return {f"blk{i}": init_block(subkey(key, i), cfg, kind, i, dtype, cross_attn)
+            for i, kind in enumerate(cfg.pattern)}
+
+
+def init_lm(key, cfg: ModelConfig, max_seq: int, dtype=None):
+    """Full parameter tree. Usable under jax.eval_shape for the dry-run."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    d, Vp = cfg.d_model, cfg.padded_vocab
+    periods = jax.vmap(
+        lambda k: init_period(k, cfg, dtype, cross_attn=cfg.encoder_layers > 0)
+    )(jax.random.split(subkey(key, "periods"), cfg.num_periods))
+    params = {
+        "embed": dense_init(subkey(key, "embed"), (Vp, d), dtype),
+        "periods": periods,
+        "final_norm": jnp.ones((d,), dtype),
+        "unembed": dense_init(subkey(key, "unembed"), (d, Vp), dtype),
+    }
+    if cfg.rope_theta <= 0:                      # learned absolute positions
+        params["pos_embed"] = dense_init(subkey(key, "pos"), (max_seq, d), dtype)
+    if cfg.encoder_layers:
+        enc_cfg = dataclasses.replace(cfg, block_pattern=(ATTN,),
+                                      num_experts=0, sliding_window=0)
+        params["encoder"] = {
+            "pos_embed": dense_init(subkey(key, "encpos"),
+                                    (cfg.encoder_seq, d), dtype),
+            "periods": jax.vmap(
+                lambda k: init_period(k, enc_cfg, dtype)
+            )(jax.random.split(subkey(key, "enc"), cfg.encoder_layers)),
+            "final_norm": jnp.ones((d,), dtype),
+        }
+    return params
+
+
+# --------------------------------------------------------------------- #
+# blocks
+# --------------------------------------------------------------------- #
+def apply_block(p, x, cfg: ModelConfig, kind: str, pos: int, rules, *,
+                positions, mode: str, cache=None, cache_len=None,
+                enc_out=None, cross_cache=None, causal: bool = True):
+    """Returns (x, new_cache_entry)."""
+    if kind == RWKV:
+        state = cache if mode == "decode" else None
+        x, st = rwkv_block(p["rwkv"], x, cfg, rules, state)
+        return x, (st if mode in ("decode", "prefill") else None)
+
+    new_cache: Dict[str, Any] = {}
+    if kind == ATTN:
+        h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+        window = cfg.sliding_window
+        if mode == "decode":
+            y, kv = attention(p["attn"], h, cfg, rules, positions,
+                              causal=True, window=window,
+                              cache=(cache["k"], cache["v"]),
+                              cache_len=cache_len)
+            new_cache.update(k=kv[0], v=kv[1])
+        else:
+            y, kv = attention(p["attn"], h, cfg, rules, positions,
+                              causal=causal,
+                              window=window, write_cache=(mode == "prefill"))
+            if mode == "prefill":
+                k, v = kv
+                if window and k.shape[1] > window:   # ring-align SWA cache
+                    p0 = k.shape[1] - window
+                    k = jnp.roll(k[:, -window:], p0 % window, axis=1)
+                    v = jnp.roll(v[:, -window:], p0 % window, axis=1)
+                new_cache.update(k=k, v=v)
+        x = x + y
+        if "ln_cross" in p:                          # decoder cross-attention
+            h = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+            if mode == "decode":
+                kv_o = (cross_cache["ck"], cross_cache["cv"])
+                new_cache.update(ck=kv_o[0], cv=kv_o[1])
+            else:
+                kv_o = _cross_kv(p["cross"], enc_out, cfg, rules)
+                if mode == "prefill":
+                    new_cache.update(ck=kv_o[0], cv=kv_o[1])
+            y, _ = attention(p["cross"], h, cfg, rules, positions,
+                             causal=False, kv_override=kv_o)
+            x = x + y
+    else:                                            # MAMBA
+        state = cache if mode == "decode" else None
+        x, st = mamba_block(p["mamba"], x, cfg, rules, state)
+        if mode in ("decode", "prefill"):
+            new_cache.update(st)
+
+    h = rms_norm(x, p["ln_ffn"], cfg.norm_eps)
+    y = moe_ffn(p["moe"], h, cfg, rules) if "moe" in p else mlp(p["mlp"], h, rules)
+    x = rules.act_btd(x + y)
+    return x, (new_cache if mode in ("decode", "prefill") else None)
+
+
+def _cross_kv(p, enc_out, cfg: ModelConfig, rules):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    dup = rules.attn.kv_dup if rules.attn.kind == "tp" else 1
+    if dup > 1:
+        k = jnp.repeat(k, dup, axis=2)
+        v = jnp.repeat(v, dup, axis=2)
+    return k, v
+
+
+# --------------------------------------------------------------------- #
+# period stack (scan)
+# --------------------------------------------------------------------- #
+def run_periods(periods, x, cfg: ModelConfig, rules, *, positions, mode,
+                caches=None, cache_len=None, enc_out=None, remat=True,
+                pattern=None, unroll=False):
+    """Scan the period stack. caches: stacked pytree (leading dim = periods).
+
+    ``unroll=True`` replaces the lax.scan with a python loop over period
+    slices — used by the dry-run depth variants so ``cost_analysis`` counts
+    every layer (scan bodies are costed once; DESIGN.md §7).
+    """
+    pattern = pattern or cfg.pattern
+
+    def body(carry, xs):
+        h = carry
+        pparams, pcache = xs
+        new_caches = []
+        for i, kind in enumerate(pattern):
+            ci = None if pcache is None else pcache[i]
+            h, nc = apply_block(
+                pparams[f"blk{i}"], h, cfg, kind, i, rules,
+                positions=positions, mode=mode, cache=ci,
+                cache_len=cache_len, enc_out=enc_out, cross_cache=ci)
+            new_caches.append(nc)
+        out_c = tuple(new_caches) if mode in ("decode", "prefill") else None
+        return h, out_c
+
+    if remat and mode == "train":
+        body = jax.checkpoint(body)
+
+    if unroll:
+        n = jax.tree.leaves(periods)[0].shape[0]
+        outs = []
+        for p_idx in range(n):
+            xs_i = (jax.tree.map(lambda a: a[p_idx], periods),
+                    None if caches is None
+                    else jax.tree.map(lambda a: a[p_idx], caches))
+            x, out_c = body(x, xs_i)
+            outs.append(out_c)
+        if mode in ("decode", "prefill"):
+            new_caches = jax.tree.map(lambda *ls: jnp.stack(ls), *outs)
+        else:
+            new_caches = None
+        return x, new_caches
+
+    xs = (periods, caches)
+    x, new_caches = jax.lax.scan(body, x, xs)
+    return x, new_caches
+
+
+def run_periods_paired(periods, x_pair, cfg: ModelConfig, rules, *,
+                       positions, seed, eps, salts, sizes, remat=True,
+                       unroll=False, enc_pair=(None, None)):
+    """Fused antithetic forward (§Perf iteration): advance the theta+eps*z
+    and theta-eps*z probes through the layer stack *together*, so each
+    layer's FSDP weight all-gather is paid once for both passes.
+
+    Exactness: the per-slice noise equals the stacked-leaf noise by the
+    flat-offset property of core/prng.py, so the losses are bitwise the
+    math of the unfused path (up to fp reassociation). Train mode only.
+    """
+    from ..core import zo as zo_mod
+    pattern = cfg.pattern
+
+    def one(h, pparams, enc_out):
+        for i, kind in enumerate(pattern):
+            h, _ = apply_block(pparams[f"blk{i}"], h, cfg, kind, i, rules,
+                               positions=positions, mode="train",
+                               enc_out=enc_out)
+        return h
+
+    def body(carry, xs):
+        hp, hm = carry
+        pparams, p_idx = xs
+        if rules.strategy == "fsdp" and rules.mesh is not None:
+            # gather each layer's weights ONCE (replicated), then derive the
+            # +/- perturbed copies locally — this is the whole point of the
+            # fused pair: without it GSPMD gathers both perturbed copies.
+            pparams = jax.tree.map(
+                lambda a: rules.wsc(a, *((None,) * a.ndim)), pparams)
+        pp = zo_mod.perturb_slice(pparams, salts, sizes, p_idx, seed, eps)
+        hp = one(hp, pp, enc_pair[0])
+        pm = zo_mod.perturb_slice(pparams, salts, sizes, p_idx, seed, -eps)
+        hm = one(hm, pm, enc_pair[1])
+        return (hp, hm), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    n = jax.tree.leaves(periods)[0].shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    if unroll:
+        for i in range(n):
+            x_pair, _ = body(x_pair, (jax.tree.map(lambda a: a[i], periods),
+                                      jnp.int32(i)))
+        return x_pair
+    x_pair, _ = jax.lax.scan(body, x_pair, (periods, idx))
+    return x_pair
+
+
+# --------------------------------------------------------------------- #
+# embedding / head
+# --------------------------------------------------------------------- #
+def embed(params, tokens, cfg: ModelConfig, rules, positions,
+          img_embeds=None):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if img_embeds is not None:
+        x = jnp.concatenate([img_embeds.astype(x.dtype), x], axis=1)
+    if "pos_embed" in params:
+        x = x + jnp.take(params["pos_embed"], positions, axis=0)
+    return rules.act_btd(x)
+
+
+def run_encoder(params, frames, cfg: ModelConfig, rules, unroll=False):
+    enc = params["encoder"]
+    x = frames + enc["pos_embed"][None, :frames.shape[1]]
+    x = rules.act_btd(x.astype(frames.dtype))
+    pos = jnp.broadcast_to(jnp.arange(frames.shape[1], dtype=jnp.int32),
+                           frames.shape[:2])
+    enc_cfg = dataclasses.replace(cfg, block_pattern=(ATTN,), num_experts=0,
+                                  sliding_window=0, rope_theta=0.0)
+
+    def body(h, pparams):
+        h, _ = apply_block(pparams["blk0"], h, enc_cfg, ATTN, 0, rules,
+                           positions=pos, mode="encode", causal=False)
+        return h, None
+
+    if unroll:
+        n = jax.tree.leaves(enc["periods"])[0].shape[0]
+        for i in range(n):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], enc["periods"]))
+    else:
+        x, _ = jax.lax.scan(body, x, enc["periods"])
+    return rms_norm(x, enc["final_norm"], cfg.norm_eps)
+
+
+def head_logits(params, x, cfg: ModelConfig, rules):
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["unembed"])
+    return rules.logits(logits)
+
+
+def lm_loss(params, x, labels, mask, cfg: ModelConfig, rules):
+    """Chunked CE over the (vocab-sharded) logits. Returns scalar fp32."""
+    B, S, _ = x.shape
+    Vp = cfg.padded_vocab
+    n = CE_CHUNKS if S % CE_CHUNKS == 0 and S >= CE_CHUNKS else 1
+    c = S // n
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    tot = jnp.float32(0)
+    cnt = jnp.float32(0)
+    for i in range(n):
+        hc = jax.lax.slice_in_dim(h, i * c, (i + 1) * c, axis=1)
+        yc = jax.lax.slice_in_dim(labels, i * c, (i + 1) * c, axis=1)
+        mc = jax.lax.slice_in_dim(mask, i * c, (i + 1) * c, axis=1)
+        logits = jnp.einsum("bsd,dv->bsv", hc, params["unembed"])
+        logits = rules.logits(logits).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(yc, Vp, dtype=logits.dtype)
+        ll = jnp.sum(logits * onehot, axis=-1)
+        tot = tot + jnp.sum((logz - ll) * mc)
+        cnt = cnt + jnp.sum(mc)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# --------------------------------------------------------------------- #
+# cache construction
+# --------------------------------------------------------------------- #
+def make_caches(cfg: ModelConfig, B: int, seq_len: int, rules, dtype=None):
+    """Zero caches, stacked [periods, ...], matching run_periods xs layout."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    dup = rules.attn.kv_dup if rules.attn.kind == "tp" else 1
+    KVd = cfg.num_kv_heads * dup
+    T = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    per_period = []
+    for i, kind in enumerate(cfg.pattern):
+        if kind == ATTN:
+            entry = {"k": jnp.zeros((B, T, KVd, cfg.head_dim), dtype),
+                     "v": jnp.zeros((B, T, KVd, cfg.head_dim), dtype)}
+            if cfg.encoder_layers:
+                entry["ck"] = jnp.zeros((B, cfg.encoder_seq, KVd, cfg.head_dim), dtype)
+                entry["cv"] = jnp.zeros((B, cfg.encoder_seq, KVd, cfg.head_dim), dtype)
+        elif kind == MAMBA:
+            entry = init_mamba_state(cfg, B, dtype)
+        else:
+            entry = init_rwkv_state(cfg, B, dtype)
+        per_period.append(entry)
+    stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.num_periods,) + a.shape).copy(),
+        tuple(per_period))
+    return stacked

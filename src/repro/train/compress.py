@@ -1,0 +1,79 @@
+"""Gradient compression for the BP tail (beyond-paper, DESIGN.md §8).
+
+ElasticZO already reduces the ZO part's gradient traffic to one scalar per
+probe; the only tensor collective left in training is the BP-tail gradient
+all-reduce. ``int8_compress``/``int8_decompress`` implement per-tensor
+scaled int8 quantization with error feedback — the residual is carried in
+the caller's state so the quantization error is re-injected next step
+(Seide et al. / 1-bit SGD style convergence behaviour).
+
+Under GSPMD the all-reduce itself is implicit; production multi-host use
+wraps the tail-grad reduction in shard_map with these around a psum. The
+unit tests validate the error-feedback contraction property.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_compress(g: jax.Array, residual: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(g + residual) -> (q int8, scale fp32, new_residual)."""
+    x = g.astype(jnp.float32) + residual
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    new_residual = x - q.astype(jnp.float32) * scale
+    return q, scale, new_residual
+
+
+def int8_decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, residuals):
+    """Tree-wise error-feedback int8 compression."""
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_leaves(residuals)
+    qs, scales, new_rs = [], [], []
+    for g, r in zip(flat_g, flat_r):
+        q, s, nr = int8_compress(g, r)
+        qs.append(q)
+        scales.append(s)
+        new_rs.append(nr)
+    return (jax.tree_util.tree_unflatten(tdef, qs),
+            jax.tree_util.tree_unflatten(tdef, scales),
+            jax.tree_util.tree_unflatten(tdef, new_rs))
+
+
+def decompress_tree(qs, scales):
+    return jax.tree.map(int8_decompress, qs, scales)
+
+
+def compressed_psum(grads, residuals, axis_name: str):
+    """shard_map-side helper: quantize -> psum(int32) -> dequantize.
+
+    Protocol: (1) pmax of the local maxima fixes a *shared* scale per
+    tensor (one scalar all-reduce), (2) every shard quantizes against it,
+    (3) int8 payloads are psum'd in int32 (exact), (4) dequantize + error
+    feedback. Wire format ~1 byte/element.
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        scale = jax.lax.pmax(
+            jnp.maximum(jnp.max(jnp.abs(x)), 1e-30), axis_name) / 127.0
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        new_r = x - q.astype(jnp.float32) * scale
+        avg = jax.lax.psum(q.astype(jnp.int32), axis_name).astype(jnp.float32) \
+            * scale / n
+        return avg, new_r
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_leaves(residuals)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    avg = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+    new_res = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+    return avg, new_res

@@ -1,0 +1,61 @@
+"""Elastic scaling runtime: survive mesh-size changes mid-training.
+
+The contract (DESIGN.md §8):
+  1. training state = (params checkpoint, step);  data state = step;
+  2. ZO noise is a pure function of (seed, step, global flat index)
+     (core/prng.py), so it is *identical on any mesh*;
+  3. checkpoints restore onto whatever mesh currently exists
+     (train/checkpoint.py re-shards on load).
+
+``resume_on_mesh`` packages this: given a checkpoint dir and a (possibly
+different) mesh, it rebuilds rules/shardings/step-fn and returns a state
+that continues bit-exact. The straggler path is orthogonal: probes are
+masked per-step (core/elastic.py), no remesh needed for a slow host.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import LaneConfig, ModelConfig, ShapeConfig
+from ..core import api
+from ..core.elastic import TrainState
+from ..sharding.params import param_shardings
+from ..sharding.rules import ShardingRules
+from . import checkpoint as ckpt
+
+
+def build_for_mesh(cfg: ModelConfig, shape: ShapeConfig, lane: LaneConfig,
+                   mesh, strategy: str = "tp"):
+    """(model, param_shardings, jitted step) for the given mesh."""
+    rules = ShardingRules(mesh, cfg, shape, strategy=strategy)
+    model = api.build(cfg, shape, lane, rules)
+    pshard = param_shardings(model.abstract_params(), rules)
+    step = jax.jit(model.train_step, donate_argnums=(0,))
+    return model, pshard, step
+
+
+def resume_on_mesh(ckpt_dir, cfg: ModelConfig, shape: ShapeConfig,
+                   lane: LaneConfig, mesh, seed: int = 0,
+                   strategy: str = "tp") -> Tuple[TrainState, object, object]:
+    """Restore the latest checkpoint onto `mesh` (any size/shape).
+
+    Returns (state, model, jitted_step). If no checkpoint exists, fresh
+    init on the mesh.
+    """
+    model, pshard, step = build_for_mesh(cfg, shape, lane, mesh, strategy)
+    template = model.abstract_params()
+    last = ckpt.latest_step(ckpt_dir) if ckpt_dir else None
+    if last is None:
+        params = model.init(jax.random.key(seed))
+        if mesh is not None:
+            params = jax.tree.map(jax.device_put, params, pshard)
+        state = TrainState(params, jnp.int32(0),
+                           jax.random.key_data(jax.random.key(seed)))
+    else:
+        params, at_step = ckpt.restore(ckpt_dir, template, shardings=pshard)
+        state = TrainState(params, jnp.int32(at_step),
+                           jax.random.key_data(jax.random.key(seed)))
+    return state, model, step

@@ -1,0 +1,97 @@
+"""Optimizers + schedules, from scratch (no optax offline).
+
+The paper uses vanilla SGD (no momentum/weight decay) with a 0.8x/10-epoch
+decay for FP32 training, Adam for fine-tuning pre-training. All are
+provided for the BP-tail/full-BP lanes; ZO updates live in core/zo.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, jax.Array], Tuple[Any, Any]]
+    # update(grads, opt_state, step) -> (updates, opt_state); caller applies
+    # params - lr(step) * updates? No: lr folded in here. updates are deltas.
+
+
+def _cast_like(x, ref):
+    return x.astype(ref.dtype) if hasattr(ref, "dtype") else x
+
+
+def sgd(lr: Callable[[jax.Array], jax.Array] | float,
+        momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.float32(lr))
+
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, step):
+        eta = lr_fn(step)
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: eta * g.astype(jnp.float32), grads), ()
+        new_m = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state, grads)
+        if nesterov:
+            upd = jax.tree.map(
+                lambda m, g: eta * (momentum * m + g.astype(jnp.float32)),
+                new_m, grads)
+        else:
+            upd = jax.tree.map(lambda m: eta * m, new_m)
+        return upd, new_m
+
+    return Optimizer(init, update)
+
+
+def adam(lr: Callable[[jax.Array], jax.Array] | float, b1=0.9, b2=0.999,
+         eps=1e-8) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.float32(lr))
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, step):
+        t = step.astype(jnp.float32) + 1.0
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        mh = jax.tree.map(lambda m_: m_ / (1 - b1 ** t), m)
+        vh = jax.tree.map(lambda v_: v_ / (1 - b2 ** t), v)
+        upd = jax.tree.map(
+            lambda m_, v_: lr_fn(step) * m_ / (jnp.sqrt(v_) + eps), mh, vh)
+        return upd, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) - u).astype(p.dtype),
+        params, updates)
+
+
+# ------------------------------ schedules ---------------------------- #
+def step_decay(base: float, factor: float = 0.8, every: int = 10_000):
+    """Paper schedule: decay by `factor` every `every` steps (10 epochs)."""
+    def f(step):
+        k = jnp.floor(step.astype(jnp.float32) / every)
+        return jnp.float32(base) * jnp.power(jnp.float32(factor), k)
+    return f
+
+
+def cosine(base: float, total: int, warmup: int = 0, floor: float = 0.0):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.float32(base) * jnp.where(warmup > 0, warm, 1.0) * cos
+    return f

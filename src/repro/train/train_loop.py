@@ -1,0 +1,86 @@
+"""Training driver: metrics, checkpoint cadence, crash recovery, stragglers.
+
+The loop is deliberately dumb about data: batches are pure functions of the
+step index (data/synthetic.py), so the *entire* restart state is the
+checkpointed (params, step) — after a crash or an elastic re-mesh, training
+resumes bit-exactly (ZO noise included, because core/prng.py noise is
+mesh-independent).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core.elastic import TrainState
+from . import checkpoint as ckpt
+
+
+@dataclass
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    keep: int = 3
+    seed: int = 0
+    # straggler simulation/mitigation: probability a probe is dropped and
+    # masked out instead of waited for (DESIGN.md §8)
+    probe_drop_rate: float = 0.0
+    n_probes: int = 1
+
+
+def init_state(params, seed: int) -> TrainState:
+    return TrainState(params, jnp.int32(0),
+                      jax.random.key_data(jax.random.key(seed)))
+
+
+def run(step_fn: Callable, state: TrainState,
+        batch_fn: Callable[[int], Dict[str, Any]],
+        cfg: LoopConfig,
+        param_shardings=None) -> TrainState:
+    """batch_fn(step) -> device-ready batch dict."""
+    saver = ckpt.AsyncCheckpointer(cfg.ckpt_dir, cfg.keep) if cfg.ckpt_dir else None
+    jstep = jax.jit(step_fn, donate_argnums=(0,)) \
+        if not isinstance(step_fn, jax.stages.Wrapped) else step_fn
+
+    # resume if a committed checkpoint exists
+    start = int(state.step)
+    if cfg.ckpt_dir:
+        last = ckpt.latest_step(cfg.ckpt_dir)
+        if last is not None and last > start:
+            params, last = ckpt.restore(cfg.ckpt_dir, state.params,
+                                        shardings=param_shardings)
+            state = TrainState(params, jnp.int32(last), state.seed)
+            start = last
+            print(f"[train] resumed from step {last}")
+
+    rng = np.random.default_rng(cfg.seed + 17)
+    t0 = time.time()
+    history = []
+    for step in range(start, cfg.total_steps):
+        batch = batch_fn(step)
+        mask = (rng.uniform(size=cfg.n_probes) >=
+                cfg.probe_drop_rate).astype(np.float32)
+        if mask.sum() == 0:
+            mask[0] = 1.0          # never drop every probe
+        state, metrics = jstep(state, batch, jnp.asarray(mask))
+        if cfg.log_every and (step % cfg.log_every == 0
+                              or step == cfg.total_steps - 1):
+            loss = float(metrics["loss"])
+            history.append((step, loss))
+            dt = time.time() - t0
+            print(f"[train] step {step:6d} loss {loss:.4f} "
+                  f"({dt / max(step - start + 1, 1):.3f}s/step)", flush=True)
+        if saver and step > start and step % cfg.ckpt_every == 0:
+            saver.save(step, state.params, extra={"loss": float(metrics['loss'])})
+    if saver:
+        saver.save(cfg.total_steps, state.params)
+        saver.wait()
+    run.history = history
+    return state

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests see the real single CPU device (the 512-device override is
+# dryrun.py-only by design).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

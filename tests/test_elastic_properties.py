@@ -1,0 +1,71 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import prng, zo
+from repro.core.int8 import psr_shift, bitwidth
+from repro.core.int_loss import int_loss_sign, float_loss
+from repro.core.int8 import QTensor
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 64),
+       st.integers(1, 2000))
+def test_prng_layout_invariance(seed, salt, n):
+    """z depends only on the flat index: any reshape of the same count is
+    bitwise identical (the elastic-remesh determinism guarantee)."""
+    s = jnp.uint32(seed)
+    a = prng.normal(s, salt, (n,))
+    if n % 2 == 0:
+        b = prng.normal(s, salt, (2, n // 2)).reshape(n)
+        assert jnp.array_equal(a, b)
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(0, 2**31 - 1), st.floats(1e-5, 1e-1))
+def test_perturb_antithetic_symmetry(seed, eps):
+    """(theta+eps z) + (theta-eps z) == 2 theta exactly in fp32 pairs."""
+    params = {"w": jnp.ones((64,), jnp.float32) * 0.5}
+    key = jax.random.key(seed % 2**31)
+    p = zo.perturb(params, key, eps)["w"]
+    m = zo.perturb(params, key, -eps)["w"]
+    np.testing.assert_allclose(p + m, 2 * params["w"], rtol=1e-6, atol=1e-6)
+
+
+@settings(deadline=None, max_examples=40)
+@given(st.integers(-(2**24), 2**24), st.integers(0, 10))
+def test_psr_bounded_error(x, s):
+    """|psr(x, s) - x/2^s| < 1 always (rounding moves at most one step)."""
+    out = int(psr_shift(jnp.int32(x), jnp.int32(s)))
+    assert abs(out - x / (2 ** s)) < 1.0 + 1e-9
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(1, 2**30))
+def test_bitwidth_matches_python(n):
+    assert int(bitwidth(jnp.int32(n))) == n.bit_length()
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 10**6))
+def test_int_loss_sign_is_antisymmetric(seed):
+    """sgn(L(a)-L(b)) == -sgn(L(b)-L(a)) for the integer path."""
+    rng = np.random.default_rng(seed)
+    a = QTensor(jnp.asarray(rng.integers(-100, 100, (4, 10)), jnp.int8),
+                jnp.int32(int(rng.integers(-6, -2))))
+    b = QTensor(jnp.asarray(rng.integers(-100, 100, (4, 10)), jnp.int8),
+                jnp.int32(int(rng.integers(-6, -2))))
+    y = jnp.asarray(rng.integers(0, 10, (4,)), jnp.int32)
+    assert int(int_loss_sign(a, b, y)) == -int(int_loss_sign(b, a, y))
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(0, 10**6))
+def test_int_loss_sign_zero_on_equal(seed):
+    rng = np.random.default_rng(seed)
+    a = QTensor(jnp.asarray(rng.integers(-100, 100, (2, 10)), jnp.int8),
+                jnp.int32(-4))
+    y = jnp.asarray(rng.integers(0, 10, (2,)), jnp.int32)
+    assert int(int_loss_sign(a, a, y)) == 0

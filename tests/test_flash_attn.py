@@ -1,0 +1,37 @@
+"""Flash-attention Pallas kernel vs dense-softmax oracle (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attn import flash_attention, flash_attention_ref
+
+
+@pytest.mark.parametrize("B,H,Sq,Sk,D,causal,win", [
+    (1, 2, 128, 128, 64, True, 0),
+    (2, 1, 256, 256, 128, True, 0),
+    (1, 1, 128, 256, 64, False, 0),      # cross-attention shape
+    (1, 2, 256, 256, 64, True, 128),     # sliding window
+    (1, 1, 384, 384, 128, True, 0),
+])
+def test_flash_matches_ref(B, H, Sq, Sk, D, causal, win):
+    rng = np.random.default_rng(Sq + Sk + D)
+    q = jnp.asarray(rng.normal(size=(B, H, Sq, D)), jnp.float32) * 0.3
+    k = jnp.asarray(rng.normal(size=(B, H, Sk, D)), jnp.float32) * 0.3
+    v = jnp.asarray(rng.normal(size=(B, H, Sk, D)), jnp.float32)
+    o1 = flash_attention(q, k, v, causal=causal, window=win, interpret=True)
+    o2 = flash_attention_ref(q, k, v, causal=causal, window=win)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_bf16_io():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.bfloat16)
+    o1 = flash_attention(q, k, v, interpret=True)
+    o2 = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32),
+                               rtol=2e-2, atol=2e-2)
+    assert o1.dtype == jnp.bfloat16

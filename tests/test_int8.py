@@ -1,0 +1,118 @@
+"""NITI int8 substrate + integer CE sign trick (paper §4.2-4.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import int8 as q8
+from repro.core.int8 import QTensor
+from repro.core.int_loss import float_loss, int_loss_sign
+
+
+def test_quant_roundtrip():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(64, 64)) * 3,
+                    jnp.float32)
+    qt = q8.quant_from_float(x)
+    back = q8.dequant(qt)
+    rel = float(jnp.max(jnp.abs(back - x)) / jnp.max(jnp.abs(x)))
+    assert rel < 0.02           # 7-bit quantization error bound
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(0, 2**20), st.integers(0, 8))
+def test_psr_expectation(x, s):
+    """Pseudo-stochastic rounding is ~unbiased: averaging psr over many
+    nearby values recovers x / 2^s within the quantization step."""
+    xs = jnp.arange(x, x + 256, dtype=jnp.int32)
+    out = q8.psr_shift(xs, jnp.int32(s))
+    mean_out = float(out.astype(jnp.float64).mean())
+    mean_in = float(xs.astype(jnp.float64).mean()) / (2 ** s)
+    assert abs(mean_out - mean_in) < 1.0, (mean_out, mean_in)
+
+
+def test_psr_sign_symmetry():
+    xs = jnp.asarray([100, -100, 255, -255, 7, -7], jnp.int32)
+    out = q8.psr_shift(xs, jnp.int32(3))
+    assert jnp.array_equal(jnp.sign(out), jnp.sign(xs))
+    assert jnp.array_equal(q8.psr_shift(xs, jnp.int32(0)), jnp.abs(xs) * jnp.sign(xs))
+
+
+def test_bitwidth():
+    for v, b in [(1, 1), (2, 2), (127, 7), (128, 8), (255, 8), (256, 9)]:
+        assert int(q8.bitwidth(jnp.int32(v))) == b, v
+
+
+def test_int8_matmul_matches_fp():
+    rng = np.random.default_rng(1)
+    a = QTensor(jnp.asarray(rng.integers(-64, 64, (32, 16)), jnp.int8),
+                jnp.int32(-5))
+    w = QTensor(jnp.asarray(rng.integers(-64, 64, (16, 8)), jnp.int8),
+                jnp.int32(-6))
+    out = q8.qdense(a, w)
+    exact = q8.dequant(a) @ q8.dequant(w)
+    approx = q8.dequant(out)
+    denom = float(jnp.max(jnp.abs(exact))) + 1e-9
+    assert float(jnp.max(jnp.abs(approx - exact))) / denom < 0.02
+
+
+def test_qconv_equals_lax_conv():
+    rng = np.random.default_rng(2)
+    x = QTensor(jnp.asarray(rng.integers(-32, 32, (2, 12, 12, 3)), jnp.int8),
+                jnp.int32(-4))
+    w = QTensor(jnp.asarray(rng.integers(-32, 32, (5, 5, 3, 4)), jnp.int8),
+                jnp.int32(-4))
+    out = q8.qconv2d(x, w)
+    ref = jax.lax.conv_general_dilated(
+        x.data.astype(jnp.float32), w.data.astype(jnp.float32), (1, 1),
+        "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    got = out.data.astype(jnp.float32) * 2.0 ** float(out.exp - (x.exp + w.exp))
+    # integer conv then rescale: compare against exact int32 accumulation
+    np.testing.assert_allclose(got, ref, atol=2.0 ** float(out.exp - (x.exp + w.exp)))
+
+
+def _rand_qlogits(rng, B, C, exp_a, exp_b):
+    a = QTensor(jnp.asarray(rng.integers(-100, 100, (B, C)), jnp.int8),
+                jnp.int32(exp_a))
+    b = QTensor(jnp.asarray(rng.integers(-100, 100, (B, C)), jnp.int8),
+                jnp.int32(exp_b))
+    return a, b
+
+
+def test_int_loss_sign_agreement():
+    """Paper §4.3 / §5.2: integer sign matches the fp32 sign ~95% of the
+    time (they report ~95%; we assert >= 90% over random logit pairs)."""
+    rng = np.random.default_rng(3)
+    agree, total = 0, 0
+    for trial in range(200):
+        B = rng.choice([1, 4, 8])
+        a, b = _rand_qlogits(rng, B, 10, rng.integers(-6, -2),
+                             rng.integers(-6, -2))
+        y = jnp.asarray(rng.integers(0, 10, (B,)), jnp.int32)
+        s_int = int(int_loss_sign(a, b, y))
+        s_fp = float(float_loss(a, y) - float_loss(b, y))
+        if s_fp == 0.0:
+            continue
+        total += 1
+        agree += (s_int == np.sign(s_fp))
+    assert total > 150
+    assert agree / total >= 0.90, agree / total
+
+
+def test_int8_perturb_replay_and_sparsity():
+    from repro.core.int8 import int8_noise
+    seed = jnp.uint32(99)
+    z1 = int8_noise(seed, 1, (10000,), 3, jnp.float32(0.9))
+    z2 = int8_noise(seed, 1, (10000,), 3, jnp.float32(0.9))
+    assert jnp.array_equal(z1, z2)
+    frac_zero = float(jnp.mean((z1 == 0).astype(jnp.float32)))
+    assert frac_zero > 0.88    # p_zero=0.9 (+ uniform zeros)
+    assert int(jnp.max(z1)) <= 3 and int(jnp.min(z1)) >= -3
+
+
+def test_output_error_int8_direction():
+    """e_L ~ 127*(p - y): correct class entry negative, others >= 0."""
+    logits = QTensor(jnp.asarray([[50, -20, -30, 10]], jnp.int8), jnp.int32(-4))
+    e = q8.output_error_int8(logits, jnp.asarray([0], jnp.int32))
+    assert int(e[0, 0]) < 0
+    assert all(int(v) >= 0 for v in np.asarray(e[0, 1:]))

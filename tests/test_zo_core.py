@@ -1,0 +1,128 @@
+"""ZO/SPSA core: estimator statistics, seed replay, ElasticZO equivalences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import LaneConfig
+from repro.core import prng, zo
+from repro.core.elastic import TrainState, make_elastic_step
+
+
+def quad_loss(params, batch):
+    # simple strongly-convex quadratic: ||Wx - y||^2
+    pred = batch["x"] @ params["w"]["w"] + params["v"]["w"]
+    return jnp.mean(jnp.square(pred - batch["y"]))
+
+
+def make_quad(key, d=8):
+    kw, kv, kx = jax.random.split(key, 3)
+    params = {"w": {"w": jax.random.normal(kw, (d, d)) * 0.3},
+              "v": {"w": jnp.zeros((d,))}}
+    x = jax.random.normal(kx, (32, d))
+    wstar = jax.random.normal(kv, (d, d)) * 0.3
+    y = x @ wstar
+    return params, {"x": x, "y": y}
+
+
+def test_seed_replay_identical():
+    params, _ = make_quad(jax.random.key(0))
+    key = jax.random.key(42)
+    p1 = zo.perturb(params, key, 1e-3)
+    p2 = zo.perturb(params, key, 1e-3)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        assert jnp.array_equal(a, b)
+    # perturb(+) then the replayed update reconstructs theta - eta*g*z
+    g = jnp.float32(0.5)
+    upd = zo.zo_update(params, key, 0.1 * g)
+    z_w = (jax.tree.leaves(p1)[0] - jax.tree.leaves(params)[0]) / 1e-3
+    expect = jax.tree.leaves(params)[0] - 0.1 * g * z_w
+    np.testing.assert_allclose(jax.tree.leaves(upd)[0], expect,
+                               rtol=2e-4, atol=2e-6)
+
+
+def test_spsa_unbiased_direction():
+    """E[g z] ~ grad: the SPSA estimate correlates with the true gradient."""
+    params, batch = make_quad(jax.random.key(1))
+    loss = lambda p: quad_loss(p, batch)
+    true_grad = jax.grad(loss)(params)["w"]["w"]
+    acc = jnp.zeros_like(true_grad)
+    n = 300
+    for i in range(n):
+        key = jax.random.key(i)
+        g, _, _ = zo.spsa_gradient_estimate(loss, params, key, eps=1e-3)
+        z = (zo.perturb(params, key, 1.0)["w"]["w"] - params["w"]["w"])
+        acc = acc + g * z
+    est = acc / n
+    cos = jnp.sum(est * true_grad) / (jnp.linalg.norm(est)
+                                      * jnp.linalg.norm(true_grad))
+    assert float(cos) > 0.6, float(cos)
+
+
+def test_zo_descends_quadratic():
+    params, batch = make_quad(jax.random.key(2))
+    lane = LaneConfig(lane="full_zo", learning_rate=0.02, zo_eps=1e-3,
+                      zo_num_probes=4)
+    step = jax.jit(make_elastic_step(quad_loss, lane,
+                                     partition_fn=lambda p: (dict(p), {})))
+    state = TrainState(params, jnp.int32(0),
+                       jax.random.key_data(jax.random.key(7)))
+    l0 = float(quad_loss(params, batch))
+    for _ in range(200):
+        state, m = step(state, batch, jnp.ones((4,), jnp.float32))
+    l1 = float(quad_loss(state.params, batch))
+    assert l1 < 0.5 * l0, (l0, l1)
+
+
+def test_elastic_bp_part_matches_sgd():
+    """With zero-size ZO effect (eps tiny, lr 0 on ZO? -> use full_bp lane):
+    full_bp lane must equal plain SGD."""
+    params, batch = make_quad(jax.random.key(3))
+    lane = LaneConfig(lane="full_bp", learning_rate=0.05)
+    step = jax.jit(make_elastic_step(quad_loss, lane))
+    state = TrainState(params, jnp.int32(0),
+                       jax.random.key_data(jax.random.key(9)))
+    state, _ = step(state, batch, jnp.ones((1,), jnp.float32))
+    grads = jax.grad(quad_loss)(params, batch)
+    manual = jax.tree.map(lambda p, g: p - 0.05 * g, params, grads)
+    for a, b in zip(jax.tree.leaves(state.params), jax.tree.leaves(manual)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_probe_mask_renormalizes():
+    """A dropped probe (straggler) must not change the expected update
+    scale: masking probe i == running with the surviving probes only."""
+    params, batch = make_quad(jax.random.key(4))
+    lane = LaneConfig(lane="full_zo", learning_rate=0.01, zo_num_probes=2)
+    step = jax.jit(make_elastic_step(quad_loss, lane,
+                                     partition_fn=lambda p: (dict(p), {})))
+    st = TrainState(params, jnp.int32(0),
+                    jax.random.key_data(jax.random.key(11)))
+    # run with probe 1 masked
+    s_masked, _ = step(st, batch, jnp.asarray([1.0, 0.0]))
+    # single-probe lane sees the same first probe key (fold_in(key, 0))
+    lane1 = LaneConfig(lane="full_zo", learning_rate=0.01, zo_num_probes=1)
+    step1 = jax.jit(make_elastic_step(quad_loss, lane1,
+                                      partition_fn=lambda p: (dict(p), {})))
+    s_single, _ = step1(st, batch, jnp.ones((1,), jnp.float32))
+    for a, b in zip(jax.tree.leaves(s_masked.params),
+                    jax.tree.leaves(s_single.params)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-7)
+
+
+def test_hash_noise_stats():
+    z = prng.normal(jnp.uint32(123), 5, (100_000,))
+    assert abs(float(z.mean())) < 0.02
+    assert abs(float(z.std()) - 1.0) < 0.02
+    # independence across salts
+    z2 = prng.normal(jnp.uint32(123), 6, (100_000,))
+    corr = float(jnp.corrcoef(z, z2)[0, 1])
+    assert abs(corr) < 0.02
+
+
+def test_hash_noise_mesh_independent():
+    """Same (seed, shape) -> same z regardless of how the computation is
+    laid out (this is the elastic-restart guarantee)."""
+    a = prng.normal(jnp.uint32(7), 1, (64, 32))
+    b = prng.normal(jnp.uint32(7), 1, (2048,)).reshape(64, 32)
+    assert jnp.array_equal(a, b)

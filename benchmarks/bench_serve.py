@@ -1,0 +1,104 @@
+"""Serving throughput: dense static-batch vs paged continuous batching.
+
+``PYTHONPATH=src python -m benchmarks.bench_serve --arch qwen3-4b --smoke \
+      --batches 2,4,8 --out bench_serve.json``
+
+For each batch size, generates the same greedy workload through both
+paths and reports tokens/sec plus paged-pool utilization as JSON:
+
+  {"arch": ..., "results": [{"batch": 4, "dense_tps": ..., "paged_tps":
+   ..., "page_util_peak": ..., "page_util_mean": ...}, ...]}
+
+On CPU this measures engine overhead, not kernel speed (the Pallas paged
+kernel only engages on TPU); the point of the JSON is tracking the
+dense/paged ratio and page accounting across PRs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.configs import ServeConfig, get_arch, reduced
+from repro.serve import DenseServer, Engine, SamplingParams
+
+
+def bench_one(cfg, batch: int, prompt_len: int, new_tokens: int,
+              page_size: int, seed: int = 0):
+    total = cfg.num_image_tokens + prompt_len + new_tokens
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (batch, prompt_len)).astype(np.int32)
+    serve = ServeConfig(
+        page_size=page_size,
+        num_pages=1 + batch * (-(-(total + 1) // page_size)),
+        max_batch_slots=batch, max_seq_len=total,
+        max_new_tokens=new_tokens)
+    eng = Engine(cfg, serve)
+    srv = DenseServer(cfg, eng.params, batch, prompt_len, new_tokens)
+
+    # warm both compile caches out of the timed region
+    warm = [list(p) for p in prompts]
+    eng.generate(warm, SamplingParams(), new_tokens)
+    srv.generate(prompts)
+
+    t0 = time.perf_counter()
+    dense = srv.generate(prompts)
+    dense_dt = time.perf_counter() - t0
+
+    eng2 = Engine(cfg, serve, params=eng.params)
+    eng2._decode = eng._decode            # reuse compiled decode
+    eng2._prefill_cache = eng._prefill_cache
+    t0 = time.perf_counter()
+    paged = eng2.generate(warm, SamplingParams(), new_tokens)
+    paged_dt = time.perf_counter() - t0
+
+    n_tok = batch * new_tokens
+    assert [list(d) for d in dense] == paged, "dense/paged diverged"
+    util = eng2.page_utilization()
+    return {
+        "batch": batch,
+        "prompt_len": prompt_len,
+        "new_tokens": new_tokens,
+        "dense_tps": n_tok / dense_dt,
+        "paged_tps": n_tok / paged_dt,
+        "engine_steps": eng2.steps_run,
+        "total_pages": util["total_pages"],
+        "page_util_peak": util["peak_util"],
+        "page_util_mean": util["mean_util"],
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batches", default="2,4,8")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=8)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = reduced(cfg)
+    results = []
+    for b in [int(x) for x in args.batches.split(",")]:
+        r = bench_one(cfg, b, args.prompt_len, args.tokens, args.page_size)
+        print(f"# batch={b}: dense {r['dense_tps']:.1f} tok/s, paged "
+              f"{r['paged_tps']:.1f} tok/s, peak pages "
+              f"{100 * r['page_util_peak']:.0f}%", flush=True)
+        results.append(r)
+    doc = {"arch": cfg.name, "results": results}
+    payload = json.dumps(doc, indent=2)
+    print(payload)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(payload)
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,7 @@ from .base import (ATTN, MAMBA, RWKV, LaneConfig, ModelConfig, ShapeConfig,
                    pad_to, reduced)
 from .archs import ARCHS
 from .paper_models import LENET5, POINTNET, POINTNET_SYN, LeNet5Config, PointNetConfig
+from .serve import ServeConfig
 
 
 def get_arch(name: str) -> ModelConfig:

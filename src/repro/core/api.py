@@ -41,6 +41,10 @@ class BuiltModel:
     train_step: Callable
     prefill_step: Callable
     decode_step: Callable
+    # serve subsystem entry points (src/repro/serve/): sampled serving needs
+    # raw logits, and the paged variants address the KV pool via page tables.
+    prefill_logits: Callable = None
+    decode_step_paged: Callable = None
 
     # ---- host-side helpers -------------------------------------------- #
     def input_specs(self) -> Dict[str, jax.ShapeDtypeStruct]:
@@ -92,7 +96,8 @@ def build(cfg: ModelConfig, shape: ShapeConfig, lane: LaneConfig,
 
     # ---------------- forward ------------------------------------------ #
     def backbone(params, tokens, positions, mode, *, img_embeds=None,
-                 frames=None, caches=None, cache_len=None):
+                 frames=None, caches=None, cache_len=None, paged=None,
+                 full_kv=False):
         enc_out = None
         if cfg.encoder_layers and mode != "decode":
             enc_out = run_encoder(params, frames, cfg, rules,
@@ -103,7 +108,8 @@ def build(cfg: ModelConfig, shape: ShapeConfig, lane: LaneConfig,
         x, ncz = run_periods(params["periods_zo"], x, cfg, rules,
                              positions=positions, mode=mode, caches=cz,
                              cache_len=cache_len, enc_out=enc_out,
-                             remat=remat, unroll=scan_unroll)
+                             remat=remat, unroll=scan_unroll, paged=paged,
+                             full_kv=full_kv)
         if stop_zo_grad and mode == "train":
             x = jax.lax.stop_gradient(x)
             if enc_out is not None:
@@ -111,7 +117,8 @@ def build(cfg: ModelConfig, shape: ShapeConfig, lane: LaneConfig,
         x, ncb = run_periods(params["periods_bp"], x, cfg, rules,
                              positions=positions, mode=mode, caches=cb,
                              cache_len=cache_len, enc_out=enc_out,
-                             remat=remat, unroll=scan_unroll)
+                             remat=remat, unroll=scan_unroll, paged=paged,
+                             full_kv=full_kv)
         new_caches = ({"zo": ncz, "bp": ncb}
                       if mode in ("decode", "prefill") else None)
         return x, new_caches
@@ -206,8 +213,44 @@ def build(cfg: ModelConfig, shape: ShapeConfig, lane: LaneConfig,
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_tok, new_caches
 
+    def prefill_logits(params, batch, last_pos):
+        """Prefill returning raw next-token logits gathered at per-row
+        ``last_pos`` (absolute index incl. image tokens — supports
+        right-padded/bucketed prompts), plus full-length un-rolled caches
+        for paged admission. Returns (logits [B, Vp] f32, caches)."""
+        tokens = batch["tokens"]
+        B, S_tok = tokens.shape
+        S_tot = S_tok + n_img
+        positions = jnp.broadcast_to(
+            jnp.arange(S_tot, dtype=jnp.int32), (B, S_tot))
+        x, caches = backbone(params, tokens, positions, "prefill",
+                             img_embeds=batch.get("img"),
+                             frames=batch.get("frames"), full_kv=True)
+        idx = jnp.broadcast_to(last_pos.astype(jnp.int32)[:, None, None],
+                               (B, 1, x.shape[-1]))
+        xl = jnp.take_along_axis(x, idx, axis=1)
+        logits = head_logits(params, xl, cfg, rules)
+        return logits[:, 0].astype(jnp.float32), caches
+
+    def decode_step_paged(params, tokens, caches, page_table, seq_lens):
+        """One continuous-batching decode step against the paged KV pool.
+
+        tokens [B, 1]; page_table [B, P] int32 (physical page per logical
+        block, 0 = null); seq_lens [B] int32 (tokens already cached per
+        row — also the write position of this step's token). Rows with
+        seq_len 0 and an all-null table are inactive padding slots.
+        Returns (logits [B, Vp] f32, new_caches).
+        """
+        positions = seq_lens.astype(jnp.int32)[:, None]
+        x, new_caches = backbone(params, tokens, positions, "decode",
+                                 caches=caches,
+                                 paged=(page_table, seq_lens))
+        logits = head_logits(params, x, cfg, rules)
+        return logits[:, 0].astype(jnp.float32), new_caches
+
     return BuiltModel(cfg, shape, lane, rules, init, loss_fn,
-                      train_step, prefill_step, decode_step)
+                      train_step, prefill_step, decode_step,
+                      prefill_logits, decode_step_paged)
 
 
 # ------------------------------------------------------------------ #

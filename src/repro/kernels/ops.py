@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .int8_matmul import int8_matmul as _pallas_int8_matmul
+from .paged_attn import paged_attention as _pallas_paged_attention
 from .zo_perturb import int8_perturb as _pallas_int8_perturb
 from .zo_perturb import zo_perturb as _pallas_zo_perturb
 
@@ -54,3 +55,19 @@ def int8_perturb(theta, seed, salt: int, k, r_max, p_zero, *,
         return _pallas_int8_perturb(theta, seed, salt, k, r_max, p_zero,
                                     interpret=interpret)
     return ref.int8_perturb_ref(theta, seed, salt, int(k), int(r_max), p_zero)
+
+
+def paged_attention(q, k_pool, v_pool, page_table, seq_lens, *, scale,
+                    window: int = 0, force_pallas: bool = False,
+                    interpret: bool = False):
+    """Paged decode attention — Pallas on TPU, gather+dense ref elsewhere.
+
+    The ref path is bitwise the dense decode attention (see ref.paged_attn_ref)
+    so CPU serve output is exactly comparable to the dense cache path.
+    """
+    if _on_tpu() or force_pallas:
+        return _pallas_paged_attention(q, k_pool, v_pool, page_table,
+                                       seq_lens, scale=scale, window=window,
+                                       interpret=interpret)
+    return ref.paged_attn_ref(q, k_pool, v_pool, page_table, seq_lens,
+                              scale=scale, window=window)

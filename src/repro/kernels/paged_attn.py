@@ -1,0 +1,118 @@
+"""Pallas TPU paged-attention decode kernel (vLLM-style block tables).
+
+Single-token decode over a paged KV pool: each sequence's cache lives in
+fixed-size pages scattered through a global pool, addressed by a per-row
+page table. The kernel never materializes the gathered [B, T, KVd, Dh]
+cache — pages stream HBM->VMEM one at a time via scalar-prefetched block
+indexing (``PrefetchScalarGridSpec``: the page table is available before
+the body runs, so the k/v ``index_map`` picks the *physical* page for each
+logical block), and the online-softmax accumulator stays resident in VMEM.
+
+Layouts:
+  q          [B, KVd, G, Dh]     (G = query heads per KV head)
+  k/v pool   [N_pages, page_size, KVd, Dh]
+  page_table [B, P] int32        (P = max pages per sequence; 0 = null page)
+  seq_lens   [B] int32           (tokens already written, incl. current)
+
+Grid (B, KVd, P): the page loop is innermost so the [G, Dh] accumulator
+tile survives across pages (same pattern as flash_attn.py). Pages whose
+first position is past seq_lens[b] are skipped with ``pl.when`` — their
+table entries point at the null page and are never read.
+
+TPU efficiency notes: Dh should be 64/128 and G padded toward the 8-sublane
+tile for MXU occupancy; CPU tests run ``interpret=True`` where the tiling
+constraints are relaxed.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, scale, window, page_size):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    pos = sl_ref[b]                         # current absolute position
+
+    @pl.when(p * page_size <= pos)          # page holds a live position
+    def _attend():
+        q = q_ref[0, 0].astype(jnp.float32)                 # [G, Dh]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)           # [ps, Dh]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)           # [ps, Dh]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        t = p * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        mask = t <= pos
+        if window > 0:
+            mask &= t > pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p_ = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p_, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p_, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(p == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "interpret"))
+def paged_attention(q, k_pool, v_pool, page_table, seq_lens, *,
+                    scale: float | None = None, window: int = 0,
+                    interpret: bool = False):
+    """q [B,KVd,G,Dh] x paged pools -> o [B,KVd,G,Dh]."""
+    B, KVd, G, Dh = q.shape
+    _, page_size, _, _ = k_pool.shape
+    P = page_table.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dh)
+    kern = functools.partial(_kernel, scale=scale, window=window,
+                             page_size=page_size)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KVd, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, Dh),
+                         lambda b, h, p, pt, sl: (b, h, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, Dh),
+                         lambda b, h, p, pt, sl: (pt[b, p], 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, Dh),
+                         lambda b, h, p, pt, sl: (pt[b, p], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dh),
+                               lambda b, h, p, pt, sl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, Dh), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KVd, G, Dh), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), seq_lens.astype(jnp.int32),
+      q, k_pool, v_pool)

@@ -33,3 +33,26 @@ def int8_perturb_ref(theta: jax.Array, seed: jax.Array, salt: int, k: int,
     from ..core.int8 import int8_noise
     z = int8_noise(seed, salt, theta.shape, r_max, p_zero)
     return jnp.clip(theta.astype(jnp.int32) + k * z, -127, 127).astype(jnp.int8)
+
+
+def paged_attn_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                   page_table: jax.Array, seq_lens: jax.Array, *,
+                   scale: float, window: int = 0):
+    """Gather-then-attend oracle for kernels/paged_attn.py.
+
+    q [B,KVd,G,Dh]; pools [N,ps,KVd,Dh]; page_table [B,P]; seq_lens [B].
+    Materializes the gathered [B, P*ps, KVd, Dh] cache and reuses the model's
+    dense ``_attend_block`` so the serve path is *bitwise* the dense decode
+    math — the parity tests (tests/test_serve_paged.py) rely on this.
+    """
+    from ..models.layers import _attend_block
+    B, KVd, G, Dh = q.shape
+    ps = k_pool.shape[1]
+    k = k_pool[page_table].reshape(B, -1, KVd, Dh)
+    v = v_pool[page_table].reshape(B, -1, KVd, Dh)
+    t = jnp.arange(k.shape[1], dtype=jnp.int32)
+    valid = t[None, :] <= seq_lens[:, None]
+    if window > 0:
+        valid &= t[None, :] > seq_lens[:, None] - window
+    out = _attend_block(q[:, None], k, v, valid[:, None, :], scale)
+    return out[:, 0]

@@ -1,6 +1,11 @@
-"""Serving launcher: batched prefill + greedy decode loop.
+"""Serving launcher: paged continuous-batching engine (or dense baseline).
 
-``python -m repro.launch.serve --arch qwen3-4b --smoke --tokens 32``
+``python -m repro.launch.serve --arch qwen3-4b --smoke --paged``
+
+--paged drives repro.serve.Engine: paged KV pool, admission queue,
+preemption, per-request sampling. Without it, the legacy dense
+static-batch greedy loop runs (kept as the baseline; its cache growth now
+uses the path-aware grow_dense_caches instead of a shape heuristic).
 """
 from __future__ import annotations
 
@@ -9,78 +14,85 @@ import time
 
 import numpy as np
 
-import jax
-import jax.numpy as jnp
-
-from ..configs import LaneConfig, ShapeConfig, get_arch, reduced
-from ..core import api
-from ..sharding.rules import ShardingRules
+from ..configs import LaneConfig, ServeConfig, get_arch, reduced
+from ..serve import Engine, SamplingParams, dense_generate
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through the paged continuous-batching engine")
+    ap.add_argument("--batch", type=int, default=2,
+                    help="number of requests")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="pool pages per layer (0 = auto-size)")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="decode batch slots (0 = --batch)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
     if args.smoke:
         cfg = reduced(cfg)
-    total = args.prompt_len + args.tokens
-    lane = LaneConfig()
-    pshape = ShapeConfig("cli_p", seq_len=total, global_batch=args.batch,
-                         kind="prefill")
-    dshape = ShapeConfig("cli_d", seq_len=total, global_batch=args.batch,
-                         kind="decode")
-    mp = api.build(cfg, pshape, lane, ShardingRules(None, cfg, pshape))
-    md = api.build(cfg, dshape, lane, ShardingRules(None, cfg, dshape))
-    params = mp.init(jax.random.key(0))
+    total = cfg.num_image_tokens + args.prompt_len + args.tokens
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (args.batch, args.prompt_len)).astype(np.int32)
 
-    rng = np.random.default_rng(0)
-    toks = jnp.asarray(rng.integers(0, cfg.vocab_size,
-                                    (args.batch, args.prompt_len)), jnp.int32)
-    batch = {"tokens": toks}
-    if cfg.encoder_layers:
-        batch["frames"] = jnp.zeros((args.batch, cfg.encoder_seq, cfg.d_model),
-                                    jnp.dtype(cfg.dtype))
-    if cfg.num_image_tokens:
-        batch["img"] = jnp.zeros((args.batch, cfg.num_image_tokens, cfg.d_model),
-                                 jnp.dtype(cfg.dtype))
+    if not args.paged:
+        if args.temperature != 0.0 or args.top_k or args.top_p != 1.0:
+            ap.error("--temperature/--top-k/--top-p require --paged "
+                     "(the dense baseline is greedy-only)")
+        t0 = time.time()
+        out = dense_generate(cfg, _init_params(cfg, total), prompts,
+                             args.tokens)
+        dt = time.time() - t0
+        print(f"[serve] dense: {args.tokens} tok/seq x{args.batch} in "
+              f"{dt:.2f}s ({args.batch * args.tokens / dt:.1f} tok/s)")
+        print("[serve] sample:", out[0][:16])
+        return
 
-    # prefill produces a cache sized for the *prompt*; decode steps then
-    # extend it. For the CLI we allocate the full-length cache up front by
-    # prefilling into `total`-sized shapes via right-aligned copy.
+    slots = args.slots or args.batch
+    ps = args.page_size
+    num_pages = args.num_pages or (
+        1 + slots * (-(-(total + 1) // ps)))      # null + worst case/slot
+    serve = ServeConfig(page_size=ps, num_pages=num_pages,
+                        max_batch_slots=slots, max_seq_len=total,
+                        max_new_tokens=args.tokens)
+    eng = Engine(cfg, serve)
+    sampling = SamplingParams(temperature=args.temperature,
+                              top_k=args.top_k, top_p=args.top_p,
+                              seed=args.seed)
     t0 = time.time()
-    nxt, caches = jax.jit(mp.prefill_step)(params, batch)
-    print(f"[serve] prefill {args.prompt_len} tokens in {time.time()-t0:.2f}s")
-
-    # grow cache buffers to `total` (prefill returns prompt-sized k/v)
-    def grow(leaf):
-        if leaf.ndim >= 3 and leaf.shape[2] == args.prompt_len + (
-                cfg.num_image_tokens or 0):
-            pad = [(0, 0)] * leaf.ndim
-            pad[2] = (0, total + (cfg.num_image_tokens or 0)
-                      - leaf.shape[2])
-            return jnp.pad(leaf, pad)
-        return leaf
-    caches = jax.tree.map(grow, caches)
-
-    decode = jax.jit(md.decode_step, donate_argnums=(2,))
-    out = [nxt]
-    cur = args.prompt_len + (cfg.num_image_tokens or 0)
-    t0 = time.time()
-    for i in range(args.tokens - 1):
-        nxt, caches = decode(params, nxt, caches, jnp.int32(cur))
-        out.append(nxt)
-        cur += 1
-    toks_out = jnp.concatenate(out, axis=1)
+    outs = eng.generate([list(p) for p in prompts], sampling, args.tokens)
     dt = time.time() - t0
-    print(f"[serve] decoded {args.tokens} tokens/seq x{args.batch} "
-          f"in {dt:.2f}s ({dt/max(args.tokens-1,1)*1000:.1f} ms/tok)")
-    print("[serve] sample:", np.asarray(toks_out[0][:16]))
+    util = eng.page_utilization()
+    n_tok = sum(len(o) for o in outs)
+    print(f"[serve] paged: {n_tok} tokens across {args.batch} requests in "
+          f"{dt:.2f}s ({n_tok / dt:.1f} tok/s, {eng.steps_run} engine steps)")
+    print(f"[serve] pages: peak {util['peak_pages']}/{util['total_pages']} "
+          f"({100 * util['peak_util']:.0f}%), mean "
+          f"{100 * util['mean_util']:.0f}%")
+    print("[serve] sample:", outs[0][:16])
+
+
+def _init_params(cfg, total):
+    import jax
+    from ..configs import ShapeConfig
+    from ..core import api
+    from ..sharding.rules import ShardingRules
+    shape = ShapeConfig("cli_init", seq_len=total, global_batch=1,
+                        kind="prefill")
+    m = api.build(cfg, shape, LaneConfig(), ShardingRules(None, cfg, shape))
+    return m.init(jax.random.key(0))
 
 
 if __name__ == "__main__":

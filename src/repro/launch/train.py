@@ -81,9 +81,10 @@ def main(argv=None):
     loop = LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
                       log_every=max(args.steps // 10, 1),
                       probe_drop_rate=args.probe_drop, n_probes=args.probes)
-    state = run(model.train_step, state, batch_fn, loop,
-                param_shardings=pshard)
-    print(f"[train] done at step {int(state.step)}")
+    state, history = run(model.train_step, state, batch_fn, loop,
+                         param_shardings=pshard)
+    print(f"[train] done at step {int(state.step)}; "
+          f"logged {len(history)} loss points")
 
 
 if __name__ == "__main__":

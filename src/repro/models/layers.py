@@ -133,11 +133,15 @@ def attention(p, x, cfg: ModelConfig, rules, positions,
               *, causal=True, window=0,
               cache: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
               cache_len=None, write_cache=False,
-              kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None):
+              kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+              paged: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None):
     """Returns (y, new_cache_or_None).
 
     cache: (k_cache, v_cache) each [B, T, KVd, Dh] (already kv-duplicated).
     kv_override: precomputed (k, v) for cross-attention (encoder outputs).
+    paged: (page_table [B, P], seq_lens [B]) — decode against a paged KV
+      pool; ``cache`` then holds (k_pool, v_pool) [N_pages, ps, KVd, Dh]
+      shared by all sequences, and per-row positions come from seq_lens.
     """
     B, S, d = x.shape
     H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -175,7 +179,23 @@ def attention(p, x, cfg: ModelConfig, rules, positions,
         if plan.kind == "tp" else q
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and paged is not None:
+        from ..kernels import ops
+        page_table, seq_lens = paged
+        k_pool, v_pool = cache
+        ps = k_pool.shape[1]
+        pos = seq_lens.astype(jnp.int32)                      # [B]
+        pidx = jnp.take_along_axis(page_table, (pos // ps)[:, None],
+                                   axis=1)[:, 0]
+        slot = pos % ps
+        # inactive rows (seq_len 0, table all-null) land in the reserved
+        # null page; it is never mapped, so the garbage is never read.
+        k_pool = k_pool.at[pidx, slot].set(k[:, 0].astype(k_pool.dtype))
+        v_pool = v_pool.at[pidx, slot].set(v[:, 0].astype(v_pool.dtype))
+        y = ops.paged_attention(q[:, 0], k_pool, v_pool, page_table, pos,
+                                scale=scale, window=window)[:, None]
+        new_cache = (k_pool, v_pool)
+    elif cache is not None:
         k_cache, v_cache = cache
         T = k_cache.shape[1]
         if window > 0:

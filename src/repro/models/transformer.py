@@ -95,8 +95,15 @@ def init_lm(key, cfg: ModelConfig, max_seq: int, dtype=None):
 # --------------------------------------------------------------------- #
 def apply_block(p, x, cfg: ModelConfig, kind: str, pos: int, rules, *,
                 positions, mode: str, cache=None, cache_len=None,
-                enc_out=None, cross_cache=None, causal: bool = True):
-    """Returns (x, new_cache_entry)."""
+                enc_out=None, cross_cache=None, causal: bool = True,
+                paged=None, full_kv: bool = False):
+    """Returns (x, new_cache_entry).
+
+    paged: (page_table, seq_lens) — decode against the paged KV pool
+    (serve subsystem); full_kv: prefill returns the un-rolled full-length
+    KV even for SWA archs (the paged pool stores absolute positions and
+    applies the window as a mask instead of a ring buffer).
+    """
     if kind == RWKV:
         state = cache if mode == "decode" else None
         x, st = rwkv_block(p["rwkv"], x, cfg, rules, state)
@@ -110,7 +117,7 @@ def apply_block(p, x, cfg: ModelConfig, kind: str, pos: int, rules, *,
             y, kv = attention(p["attn"], h, cfg, rules, positions,
                               causal=True, window=window,
                               cache=(cache["k"], cache["v"]),
-                              cache_len=cache_len)
+                              cache_len=cache_len, paged=paged)
             new_cache.update(k=kv[0], v=kv[1])
         else:
             y, kv = attention(p["attn"], h, cfg, rules, positions,
@@ -118,8 +125,8 @@ def apply_block(p, x, cfg: ModelConfig, kind: str, pos: int, rules, *,
                               window=window, write_cache=(mode == "prefill"))
             if mode == "prefill":
                 k, v = kv
-                if window and k.shape[1] > window:   # ring-align SWA cache
-                    p0 = k.shape[1] - window
+                if window and k.shape[1] > window and not full_kv:
+                    p0 = k.shape[1] - window         # ring-align SWA cache
                     k = jnp.roll(k[:, -window:], p0 % window, axis=1)
                     v = jnp.roll(v[:, -window:], p0 % window, axis=1)
                 new_cache.update(k=k, v=v)
@@ -163,12 +170,15 @@ def _cross_kv(p, enc_out, cfg: ModelConfig, rules):
 # --------------------------------------------------------------------- #
 def run_periods(periods, x, cfg: ModelConfig, rules, *, positions, mode,
                 caches=None, cache_len=None, enc_out=None, remat=True,
-                pattern=None, unroll=False):
+                pattern=None, unroll=False, paged=None, full_kv=False):
     """Scan the period stack. caches: stacked pytree (leading dim = periods).
 
     ``unroll=True`` replaces the lax.scan with a python loop over period
     slices — used by the dry-run depth variants so ``cost_analysis`` counts
     every layer (scan bodies are costed once; DESIGN.md §7).
+    ``paged``/``full_kv`` ride through to apply_block (serve subsystem);
+    the page table is shared by every layer, so it is closed over rather
+    than scanned.
     """
     pattern = pattern or cfg.pattern
 
@@ -181,7 +191,8 @@ def run_periods(periods, x, cfg: ModelConfig, rules, *, positions, mode,
             h, nc = apply_block(
                 pparams[f"blk{i}"], h, cfg, kind, i, rules,
                 positions=positions, mode=mode, cache=ci,
-                cache_len=cache_len, enc_out=enc_out, cross_cache=ci)
+                cache_len=cache_len, enc_out=enc_out, cross_cache=ci,
+                paged=paged, full_kv=full_kv)
             new_caches.append(nc)
         out_c = tuple(new_caches) if mode in ("decode", "prefill") else None
         return h, out_c
@@ -349,3 +360,38 @@ def make_caches(cfg: ModelConfig, B: int, seq_len: int, rules, dtype=None):
         lambda a: jnp.broadcast_to(a[None], (cfg.num_periods,) + a.shape).copy(),
         tuple(per_period))
     return stacked
+
+
+def make_paged_caches(cfg: ModelConfig, slots: int, num_pages: int,
+                      page_size: int, rules, dtype=None):
+    """Paged serve caches, same pytree structure as ``make_caches``.
+
+    Attention KV lives in a global page pool [periods, num_pages, page_size,
+    KVd, Dh] shared by all sequences (page 0 is the reserved null page);
+    recurrent (mamba/rwkv) state and cross-attention KV are O(1)-per-token
+    or fixed-size, so they stay dense per slot: [periods, slots, ...].
+    """
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    dup = rules.attn.kv_dup if rules.attn.kind == "tp" else 1
+    KVd = cfg.num_kv_heads * dup
+    per_period = []
+    for i, kind in enumerate(cfg.pattern):
+        if kind == ATTN:
+            entry = {
+                "k": jnp.zeros((num_pages, page_size, KVd, cfg.head_dim),
+                               dtype),
+                "v": jnp.zeros((num_pages, page_size, KVd, cfg.head_dim),
+                               dtype)}
+            if cfg.encoder_layers:
+                entry["ck"] = jnp.zeros((slots, cfg.encoder_seq, KVd,
+                                         cfg.head_dim), dtype)
+                entry["cv"] = jnp.zeros((slots, cfg.encoder_seq, KVd,
+                                         cfg.head_dim), dtype)
+        elif kind == MAMBA:
+            entry = init_mamba_state(cfg, slots, dtype)
+        else:
+            entry = init_rwkv_state(cfg, slots, dtype)
+        per_period.append(entry)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.num_periods,) + a.shape).copy(),
+        tuple(per_period))

@@ -1,0 +1,15 @@
+"""repro.serve — paged-KV serving engine with continuous batching.
+
+Public surface: Engine / ServeConfig / SamplingParams / dense_generate
+(see docs/serving.md for the page-table layout and scheduler states).
+"""
+from ..configs.serve import ServeConfig
+from .engine import DenseServer, Engine, StreamEvent, dense_generate
+from .kv_pages import PagePool, admit_prefill, grow_dense_caches
+from .sampler import SamplingParams, sample_tokens
+from .scheduler import Request, Scheduler, StepPlan
+
+__all__ = ["Engine", "DenseServer", "StreamEvent", "ServeConfig",
+           "SamplingParams", "sample_tokens", "PagePool", "admit_prefill",
+           "grow_dense_caches", "Request", "Scheduler", "StepPlan",
+           "dense_generate"]

@@ -1,0 +1,295 @@
+"""Serving engine: prefill -> paged continuous-batching decode -> streams.
+
+One ``Engine.step()`` is one scheduler iteration:
+
+  1. admit waiting requests (prefill each at its prompt length, sample the
+     first token from the prefill logits, scatter the dense prompt KV into
+     freshly allocated pages, write recurrent state into the batch slot);
+  2. assemble the step (page table + seq lens + per-row sampling knobs),
+     preempting newest-first if the pool can't grow someone's cache;
+  3. run one fused paged decode step over all slots and sample;
+  4. commit tokens, emitting stream events and evicting finished
+     sequences (their pages return to the pool immediately).
+
+Prefill compiles per distinct prompt length; ``ServeConfig.bucket_prompts``
+buckets lengths to powers of two for attention-only archs (right-padding
+is invisible to causal attention, and logits are gathered at the true last
+position — SSM/RWKV state would absorb the pad tokens, so those archs
+always prefill at exact length).
+
+``dense_generate`` is the static-batch greedy baseline (the old
+launch/serve.py loop with the cache-growth heuristic replaced by the
+path-aware ``grow_dense_caches``) — the parity tests and
+benchmarks/bench_serve.py compare against it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence as Seq
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ATTN, LaneConfig, ModelConfig, ShapeConfig
+from ..configs.serve import ServeConfig
+from ..core import api
+from ..models.transformer import make_paged_caches
+from ..sharding.rules import ShardingRules
+from . import kv_pages, sampler
+from .sampler import SamplingParams
+from .scheduler import Scheduler
+
+__all__ = ["Engine", "StreamEvent", "ServeConfig", "SamplingParams",
+           "dense_generate"]
+
+
+@dataclass
+class StreamEvent:
+    rid: int
+    token: int
+    text: str
+    finished: bool = False
+
+
+def _default_detok(token: int) -> str:
+    return f"{token} "
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, serve: Optional[ServeConfig] = None,
+                 lane: Optional[LaneConfig] = None, params=None,
+                 init_seed: int = 0,
+                 detok: Optional[Callable[[int], str]] = None):
+        self.cfg = cfg
+        self.serve = serve or ServeConfig()
+        self.lane = lane or LaneConfig()
+        self.detok = detok or _default_detok
+        s = self.serve
+        if s.max_pages_per_seq > s.num_pages - 1:
+            raise ValueError(
+                f"pool of {s.num_pages - 1} usable pages cannot hold one "
+                f"max-length sequence ({s.max_pages_per_seq} pages); raise "
+                f"num_pages or lower max_seq_len")
+        self._attn_only = all(k == ATTN for k in cfg.pattern)
+
+        dshape = ShapeConfig("serve_decode", seq_len=s.max_seq_len,
+                             global_batch=s.max_batch_slots, kind="decode")
+        self._drules = ShardingRules(None, cfg, dshape)
+        self._md = api.build(cfg, dshape, self.lane, self._drules)
+        self._decode = jax.jit(self._md.decode_step_paged,
+                               donate_argnums=(2,))
+        self.params = params if params is not None \
+            else self._init_params(init_seed)
+        raw = make_paged_caches(cfg, s.max_batch_slots, s.num_pages,
+                                s.page_size, self._drules)
+        self.caches = api.split_caches(raw, cfg, self.lane)
+        self.sched = Scheduler(s)
+        self._prefill_cache: Dict[int, tuple] = {}
+        self.steps_run = 0
+
+    # ------------------------------------------------------------- #
+    def _init_params(self, seed: int):
+        pshape = ShapeConfig("serve_init", seq_len=self.serve.max_seq_len,
+                             global_batch=1, kind="prefill")
+        m = api.build(self.cfg, pshape, self.lane,
+                      ShardingRules(None, self.cfg, pshape))
+        return m.init(jax.random.key(seed))
+
+    def _get_prefill(self, s_tok: int):
+        """(BuiltModel, jitted prefill_logits) for a prompt of s_tok text
+        tokens (caches compile per distinct length; bucketing bounds the
+        number of distinct lengths)."""
+        if s_tok not in self._prefill_cache:
+            seq_len = s_tok + self.cfg.num_image_tokens
+            shape = ShapeConfig(f"serve_p{s_tok}", seq_len=seq_len,
+                                global_batch=1, kind="prefill")
+            m = api.build(self.cfg, shape, self.lane,
+                          ShardingRules(None, self.cfg, shape))
+            self._prefill_cache[s_tok] = (m, jax.jit(m.prefill_logits))
+        return self._prefill_cache[s_tok]
+
+    # ------------------------------------------------------------- #
+    def submit(self, prompt: Seq[int],
+               sampling: Optional[SamplingParams] = None,
+               max_new_tokens: Optional[int] = None) -> int:
+        return self.sched.submit(prompt, sampling or SamplingParams(),
+                                 max_new_tokens,
+                                 prefix_extra=self.cfg.num_image_tokens)
+
+    def _sample_row(self, logits, seq):
+        sp = seq.req.sampling
+        return int(np.asarray(sampler.sample_tokens(
+            logits,
+            jnp.asarray([sp.temperature], jnp.float32),
+            jnp.asarray([sp.top_k], jnp.int32),
+            jnp.asarray([sp.top_p], jnp.float32),
+            jnp.asarray([np.uint32(sp.seed)], jnp.uint32),
+            jnp.asarray([len(seq.generated)], jnp.int32),
+            vocab_size=self.cfg.vocab_size))[0])
+
+    def _admit(self, seq, events: List[StreamEvent]) -> None:
+        cfg, s = self.cfg, self.serve
+        tokens = seq.cached_prompt
+        s_tok = len(tokens)
+        if s.bucket_prompts and self._attn_only:
+            s_tok = min(_next_pow2(s_tok),
+                        s.max_seq_len - cfg.num_image_tokens)
+        m, fn = self._get_prefill(s_tok)
+        toks = np.zeros((1, s_tok), np.int32)
+        toks[0, :len(tokens)] = tokens
+        batch = {"tokens": jnp.asarray(toks)}
+        dt = jnp.dtype(cfg.dtype)
+        if cfg.encoder_layers:
+            batch["frames"] = jnp.zeros(
+                (1, cfg.encoder_seq, cfg.d_model), dt)
+        if cfg.num_image_tokens:
+            batch["img"] = jnp.zeros(
+                (1, cfg.num_image_tokens, cfg.d_model), dt)
+        last = seq.pos - 1                     # absolute, incl. image tokens
+        logits, dense = fn(self.params, batch,
+                           jnp.asarray([last], jnp.int32))
+        self.caches = kv_pages.admit_prefill(
+            self.caches, dense, cfg, seq.slot, seq.pages, s.page_size,
+            table_width=s.max_pages_per_seq)
+        tok = self._sample_row(logits, seq)
+        finished = self.sched.record_first_token(seq, tok)
+        events.append(StreamEvent(seq.req.rid, tok, self.detok(tok),
+                                  finished))
+
+    # ------------------------------------------------------------- #
+    def step(self) -> List[StreamEvent]:
+        """One engine iteration; returns the stream events it produced."""
+        events: List[StreamEvent] = []
+        for seq in self.sched.poll_admissions():
+            self._admit(seq, events)
+        plan = self.sched.prepare_step()
+        if plan is None:
+            return events
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(plan.tokens)[:, None], self.caches,
+            jnp.asarray(plan.page_table), jnp.asarray(plan.seq_lens))
+        if not plan.temperature.any():
+            # all-greedy step: skip the sampler's full-vocab sorts/PRNG
+            # (bitwise the sampler's greedy branch)
+            toks = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        else:
+            toks = np.asarray(sampler.sample_tokens(
+                logits, jnp.asarray(plan.temperature),
+                jnp.asarray(plan.top_k), jnp.asarray(plan.top_p),
+                jnp.asarray(plan.seed), jnp.asarray(plan.step),
+                vocab_size=self.cfg.vocab_size))
+        active = list(self.sched.running)
+        done = {s.req.rid for s in self.sched.commit_step(toks)}
+        for seq in active:
+            tok = seq.generated[-1]
+            events.append(StreamEvent(seq.req.rid, tok, self.detok(tok),
+                                      seq.req.rid in done))
+        self.steps_run += 1
+        return events
+
+    def run(self, callback: Optional[Callable[[StreamEvent], None]] = None,
+            max_steps: int = 100_000) -> Dict[int, List[int]]:
+        """Drive until every submitted request finishes. Returns
+        rid -> generated tokens for requests that finished during THIS
+        call; `callback` sees every stream event. A long-lived server
+        should periodically `sched.clear_finished()` to bound memory."""
+        start = len(self.sched.finished)
+        for _ in range(max_steps):
+            if not self.sched.has_work():
+                break
+            for ev in self.step():
+                if callback is not None:
+                    callback(ev)
+        else:
+            raise RuntimeError("engine did not drain within max_steps")
+        self.sched.check_invariants()
+        return {s.req.rid: list(s.generated)
+                for s in self.sched.finished[start:]}
+
+    def generate(self, prompts: Seq[Seq[int]],
+                 sampling: Optional[SamplingParams] = None,
+                 max_new_tokens: Optional[int] = None) -> List[List[int]]:
+        rids = [self.submit(p, sampling, max_new_tokens) for p in prompts]
+        out = self.run()
+        return [out[r] for r in rids]
+
+    def page_utilization(self) -> Dict[str, float]:
+        total = self.serve.num_pages - 1
+        s = self.sched
+        mean = s.util_sum / s.util_steps if s.util_steps else 0.0
+        return {"total_pages": total,
+                "peak_pages": int(s.util_peak),
+                "mean_pages": mean,
+                "peak_util": s.util_peak / total,
+                "mean_util": mean / total}
+
+
+# ----------------------------------------------------------------- #
+# dense static-batch baseline
+# ----------------------------------------------------------------- #
+class DenseServer:
+    """Greedy static-batch decode with a dense grown KV cache — the legacy
+    serve path, kept as the benchmark/parity baseline. Reusable so repeat
+    ``generate`` calls hit the compile cache (bench_serve times the second
+    call)."""
+
+    def __init__(self, cfg: ModelConfig, params, batch: int,
+                 prompt_len: int, max_new_tokens: int,
+                 lane: Optional[LaneConfig] = None):
+        self.cfg, self.params = cfg, params
+        self.lane = lane or LaneConfig()
+        self.B, self.Lp = batch, prompt_len
+        self.max_new = max_new_tokens
+        n_img = cfg.num_image_tokens
+        self.total = prompt_len + n_img + max_new_tokens
+        pshape = ShapeConfig("dense_p", seq_len=prompt_len + n_img,
+                             global_batch=batch, kind="prefill")
+        dshape = ShapeConfig("dense_d", seq_len=self.total,
+                             global_batch=batch, kind="decode")
+        mp = api.build(cfg, pshape, self.lane,
+                       ShardingRules(None, cfg, pshape))
+        md = api.build(cfg, dshape, self.lane,
+                       ShardingRules(None, cfg, dshape))
+        self._prefill = jax.jit(mp.prefill_step)
+        self._decode = jax.jit(md.decode_step, donate_argnums=(2,))
+
+    def generate(self, prompts: np.ndarray) -> np.ndarray:
+        """prompts [B, Lp] int -> [B, max_new_tokens] int32."""
+        cfg, B = self.cfg, self.B
+        assert prompts.shape == (B, self.Lp), prompts.shape
+        n_img = cfg.num_image_tokens
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        dt = jnp.dtype(cfg.dtype)
+        if cfg.encoder_layers:
+            batch["frames"] = jnp.zeros((B, cfg.encoder_seq, cfg.d_model),
+                                        dt)
+        if n_img:
+            batch["img"] = jnp.zeros((B, n_img, cfg.d_model), dt)
+        nxt, caches = self._prefill(self.params, batch)
+        caches = kv_pages.grow_dense_caches(caches, cfg, self.total)
+        out = [nxt]
+        cur = self.Lp + n_img
+        for _ in range(self.max_new - 1):
+            nxt, caches = self._decode(self.params, nxt, caches,
+                                       jnp.int32(cur))
+            out.append(nxt)
+            cur += 1
+        return np.asarray(jnp.concatenate(out, axis=1))
+
+
+def dense_generate(cfg: ModelConfig, params, prompts: np.ndarray,
+                   max_new_tokens: int,
+                   lane: Optional[LaneConfig] = None) -> np.ndarray:
+    """One-shot convenience wrapper around DenseServer."""
+    B, Lp = prompts.shape
+    return DenseServer(cfg, params, B, Lp, max_new_tokens,
+                       lane).generate(prompts)

@@ -1,0 +1,156 @@
+"""Paged KV-cache pool: host-side page allocator + device admission writes.
+
+Layout (docs/serving.md): every attention layer owns a pool of
+``num_pages`` fixed-size pages, [periods, num_pages, page_size, KVd, Dh].
+A sequence's cache is an ordered list of physical page ids; the decode
+step receives the list as a row of the [slots, max_pages_per_seq] page
+table. Page 0 is the reserved **null page**: unmapped table entries point
+at it, inactive batch rows write their garbage token into it, and it is
+never allocated, so nothing that matters is ever read from or lost to it.
+
+The allocator is pure host-side bookkeeping (a free list of ints) — no
+device traffic. Device-side state changes are two jitted writes:
+``admit_prefill`` scatters a prefilled dense cache into freshly allocated
+pages (one reshape + one indexed set per KV leaf), and the per-step token
+write lives inside the decode step itself (models/layers.py paged path).
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ATTN, ModelConfig
+
+NULL_PAGE = 0
+
+
+class PagePool:
+    """Free-list page allocator. Page 0 is reserved (null page)."""
+
+    def __init__(self, num_pages: int):
+        assert num_pages >= 2, "need at least 1 allocatable page + null page"
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.num_pages - 1) - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """All-or-nothing allocation of n pages (None on exhaustion)."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        return pages
+
+    def free(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            assert p != NULL_PAGE, "null page is not allocatable"
+            assert p not in self._free, f"double free of page {p}"
+            self._free.append(p)
+
+
+# --------------------------------------------------------------------- #
+# device-side admission
+# --------------------------------------------------------------------- #
+def _scatter_kv(pool, dense, page_row, page_size):
+    """pool [pp, N, ps, KVd, Dh] <- dense [pp, 1, L, ...], chunked into the
+    pages of `page_row` [P] (fixed width; unused tail entries are the null
+    page, which swallows the spill chunks — never read, and real decode
+    writes land in each slot before the seq-len mask ever exposes it)."""
+    pp, _, L, KVd, Dh = dense.shape
+    P = page_row.shape[0]
+    d = dense[:, 0]
+    pad = P * page_size - L
+    if pad:
+        d = jnp.pad(d, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    d = d.reshape(pp, P, page_size, KVd, Dh).astype(pool.dtype)
+    return pool.at[:, page_row].set(d)
+
+
+@functools.partial(jax.jit, static_argnames=("pattern", "page_size"),
+                   donate_argnums=(0,))
+def _admit(paged, dense, slot, page_row, *, pattern, page_size):
+    out = {}
+    for part in ("zo", "bp"):
+        entries = []
+        for i, kind in enumerate(pattern):
+            pe, de = paged[part][i], dense[part][i]
+            if kind == ATTN:
+                ne = dict(pe)
+                ne["k"] = _scatter_kv(pe["k"], de["k"], page_row,
+                                      page_size)
+                ne["v"] = _scatter_kv(pe["v"], de["v"], page_row,
+                                      page_size)
+                for ck in ("ck", "cv"):      # cross-attn KV: dense per slot
+                    if ck in pe:
+                        ne[ck] = pe[ck].at[:, slot].set(
+                            de[ck][:, 0].astype(pe[ck].dtype))
+            else:                            # recurrent state: dense per slot
+                ne = jax.tree.map(
+                    lambda p, d: p.at[:, slot].set(d[:, 0].astype(p.dtype)),
+                    pe, de)
+            entries.append(ne)
+        out[part] = tuple(entries)
+    return out
+
+
+def admit_prefill(paged_caches, dense_caches, cfg: ModelConfig, slot: int,
+                  page_ids: Sequence[int], page_size: int,
+                  table_width: int):
+    """Write a batch-1 prefilled dense cache into the paged caches.
+
+    The page list is padded to the fixed `table_width`
+    (ServeConfig.max_pages_per_seq) so the jitted scatter compiles per
+    dense-cache shape only — not per admission length (re-admissions
+    after preemption have ever-changing lengths). Pad/spill chunks land
+    in the null page. Recurrent/cross state goes into row `slot`.
+    Donates the old paged caches.
+    """
+    row = list(page_ids) + [NULL_PAGE] * (table_width - len(page_ids))
+    return _admit(paged_caches, dense_caches, jnp.int32(slot),
+                  jnp.asarray(row, jnp.int32),
+                  pattern=cfg.pattern, page_size=page_size)
+
+
+# --------------------------------------------------------------------- #
+# dense-cache growth (legacy non-paged serve path)
+# --------------------------------------------------------------------- #
+def grow_dense_caches(caches, cfg: ModelConfig, total: int):
+    """Pad a prefilled dense cache's *self-attention* KV to `total` slots.
+
+    Replaces the old launch/serve.py shape heuristic (any dim-2 == prompt
+    length), which false-positived on cross-attn KV, mamba conv state, or
+    any arch with d_model == prompt length. Here the structure is walked by
+    pattern position and key name, so only attn "k"/"v" leaves grow; the
+    SWA ring stays capped at the window.
+    """
+    tgt = min(total, cfg.sliding_window) if cfg.sliding_window else total
+
+    def _grow(leaf):
+        T = leaf.shape[2]
+        if T >= tgt:
+            return leaf
+        pad = [(0, 0)] * leaf.ndim
+        pad[2] = (0, tgt - T)
+        return jnp.pad(leaf, pad)
+
+    out = {}
+    for part in ("zo", "bp"):
+        entries = []
+        for i, kind in enumerate(cfg.pattern):
+            e = caches[part][i]
+            if kind == ATTN:
+                e = dict(e)
+                e["k"] = _grow(e["k"])
+                e["v"] = _grow(e["v"])
+            entries.append(e)
+        out[part] = tuple(entries)
+    return out

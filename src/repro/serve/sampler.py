@@ -1,0 +1,97 @@
+"""Batched temperature / top-k / top-p sampling with per-request seeds.
+
+Randomness comes from core/prng.py's counter-based hash (the same
+regeneration-stable generator the ZO trainer uses), keyed on
+(request seed, sample index): resampling a request with the same seed
+reproduces its stream token-for-token regardless of which batch slots or
+engine steps it shared with other requests — the serving twin of the
+trainer's seed-replay property. ``temperature <= 0`` rows take the greedy
+argmax (bitwise the dense ``decode_step`` path, which the parity tests
+use).
+
+All knobs are per-row traced values, so one compiled sampler serves any
+mix of requests: top-k/top-p run full-vocab sorts (fine at smoke vocab
+sizes; a fused Pallas top-k is a ROADMAP follow-on).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core import prng
+
+NEG_INF = -1e30
+_SALT_GUMBEL = 0x5E17E_1
+_STEP_MIX = np.uint32(2654435761)        # Knuth multiplicative hash
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0             # 0 => greedy
+    top_k: int = 0                       # 0 => disabled
+    top_p: float = 1.0                   # 1 => disabled
+    seed: int = 0
+
+
+def _top_k_mask(logits, k):
+    """Keep the k largest per row; k[b] <= 0 disables the filter."""
+    V = logits.shape[-1]
+    sorted_desc = -jnp.sort(-logits, axis=-1)
+    idx = jnp.clip(k - 1, 0, V - 1)
+    thresh = jnp.take_along_axis(sorted_desc, idx[:, None], axis=-1)
+    keep = (logits >= thresh) | (k <= 0)[:, None]
+    return jnp.where(keep, logits, NEG_INF)
+
+
+def _top_p_mask(logits, p):
+    """Nucleus filter; p[b] >= 1 disables. Always keeps the argmax."""
+    order = jnp.argsort(-logits, axis=-1)
+    sl = jnp.take_along_axis(logits, order, axis=-1)
+    probs = jax.nn.softmax(sl, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    keep_sorted = (cum - probs) < p[:, None]       # head kept: cum-prob == 0
+    inv = jnp.argsort(order, axis=-1)
+    keep = jnp.take_along_axis(keep_sorted, inv, axis=-1)
+    keep |= (p >= 1.0)[:, None]
+    return jnp.where(keep, logits, NEG_INF)
+
+
+@functools.partial(jax.jit, static_argnames=("vocab_size",))
+def sample_tokens(logits, temperature, top_k, top_p, seed, step,
+                  vocab_size: int = 0):
+    """logits [B, V] f32; per-row knobs [B] -> tokens [B] int32.
+
+    seed uint32 (request seed), step int32 (per-request sample index).
+    vocab_size > 0 masks the padded-vocab columns [vocab_size, V) out of
+    the *sampled* branch (their unembed rows are arbitrary, so Gumbel
+    noise could otherwise emit invalid ids); greedy stays unmasked to
+    remain bitwise the dense ``decode_step`` argmax.
+    """
+    B, V = logits.shape
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    masked = logits
+    if 0 < vocab_size < V:
+        masked = jnp.where(jnp.arange(V) < vocab_size, masked, NEG_INF)
+    # temperature FIRST, filters on the actual sampling distribution
+    # (HF/vLLM convention — top_p of the flattened distribution)
+    t = jnp.maximum(temperature, 1e-6)[:, None]
+    masked = masked / t
+    masked = _top_k_mask(masked, top_k)
+    masked = _top_p_mask(masked, top_p)
+    # per-row stream: fold the sample index into the request seed, then hash
+    # the vocab axis (same machinery as the ZO perturbation noise)
+    row_seed = seed.astype(jnp.uint32) ^ \
+        (step.astype(jnp.uint32) * _STEP_MIX)
+    bits = jax.vmap(
+        lambda s: prng.uniform_bits(s, _SALT_GUMBEL, (V,)))(row_seed)
+    u = (bits >> np.uint32(8)).astype(jnp.float32) * np.float32(2 ** -24) \
+        + np.float32(2 ** -25)                     # (0, 1]
+    g = -jnp.log(-jnp.log(u))                      # Gumbel(0, 1)
+    sampled = jnp.argmax(masked + g, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature > 0, sampled, greedy)

@@ -40,10 +40,25 @@ def init_state(params, seed: int) -> TrainState:
                       jax.random.key_data(jax.random.key(seed)))
 
 
+@dataclass
+class RunResult:
+    """Terminal state of a training run plus the logged (step, loss) curve.
+
+    Unpacks as ``state, history = run(...)`` — ``run`` used to smuggle the
+    curve out via a ``run.history`` function attribute, which was both
+    thread-hostile and invisible to callers.
+    """
+    state: TrainState
+    history: list
+
+    def __iter__(self):
+        return iter((self.state, self.history))
+
+
 def run(step_fn: Callable, state: TrainState,
         batch_fn: Callable[[int], Dict[str, Any]],
         cfg: LoopConfig,
-        param_shardings=None) -> TrainState:
+        param_shardings=None) -> "RunResult":
     """batch_fn(step) -> device-ready batch dict."""
     saver = ckpt.AsyncCheckpointer(cfg.ckpt_dir, cfg.keep) if cfg.ckpt_dir else None
     jstep = jax.jit(step_fn, donate_argnums=(0,)) \
@@ -82,5 +97,4 @@ def run(step_fn: Callable, state: TrainState,
     if saver:
         saver.save(cfg.total_steps, state.params)
         saver.wait()
-    run.history = history
-    return state
+    return RunResult(state, history)

@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: suite must collect without it
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import ARCHS, LaneConfig, ShapeConfig, reduced

@@ -1,0 +1,114 @@
+"""Fleet training: wall-clock and bytes-on-wire vs single-worker.
+
+``PYTHONPATH=src python -m benchmarks.bench_fleet --arch llama3-8b \
+      --smoke --workers 8 --steps 10 --dropout 0.1``
+
+Runs the same workload twice — a W-worker chaos fleet (repro.fleet) and
+a single-worker fleet (the degenerate W=1 deployment, no chaos) — and
+reports wall-clock, per-step bytes on the wire split into the ZO scalar
+part and the int8 BP-tail part, and the ZO bytes/worker/step against the
+protocol floor of ``probes_per_worker * (8 + 4)`` bytes (one u64 seed +
+one f32 loss-diff per probe; acceptance bar: within 2x, the header is
+the only overhead). Writes BENCH_fleet.json ({name, config, metrics}).
+
+On CPU wall-clock measures protocol + engine overhead, not kernel speed;
+the bytes accounting is exact on any backend.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import FleetConfig, LaneConfig, ShapeConfig, get_arch, reduced
+from repro.core import api
+from repro.data.synthetic import token_batch
+from repro.fleet import run_fleet
+from repro.sharding.rules import ShardingRules
+
+from .bench_util import write_bench
+
+
+def bench_one(model, lane, fleet_cfg, batch_fn, steps, base_seed):
+    res = run_fleet(model.loss_fn, model.init(jax.random.key(0)), lane,
+                    fleet_cfg, batch_fn, steps=steps, base_seed=base_seed)
+    s = res.stats
+    n_records = sum(len(t) for t in res.ledger.records.values())
+    return {
+        "wall_s_per_step": s["wall_s"] / steps,
+        "zo_bytes_per_step": s["ledger_bytes_zo"] / steps,
+        "zo_bytes_per_worker_step": s["ledger_bytes_zo"] / max(n_records, 1),
+        "tail_bytes_per_step": s["ledger_bytes_tail"] / steps,
+        "uplink_bytes_per_step": s["bytes_uplink"] / steps,
+        "n_dropped": s["n_dropped"],
+        "n_straggled": s["n_straggled"],
+        "final_loss": res.coordinator.loss_history[-1][1],
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--probes-per-worker", type=int, default=1)
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--dropout", type=float, default=0.1)
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = reduced(cfg)
+    lane = LaneConfig(lane="elastic_zo", bp_tail_layers=1,
+                      zo_num_probes=args.probes_per_worker,
+                      learning_rate=1e-2, zo_eps=1e-3)
+    shape = ShapeConfig("bench_fleet", seq_len=args.seq,
+                        global_batch=args.batch, kind="train")
+    model = api.build(cfg, shape, lane, ShardingRules(None, cfg, shape))
+    base_seed = jax.random.key_data(jax.random.key(1))
+
+    def batch_fn(step):
+        x, y, m = token_batch(args.batch, args.seq, cfg.vocab_size,
+                              seed=1, step=step)
+        return {"tokens": jnp.asarray(x), "labels": jnp.asarray(y),
+                "mask": jnp.asarray(m)}
+
+    fleet = bench_one(
+        model, lane,
+        FleetConfig(num_workers=args.workers,
+                    probes_per_worker=args.probes_per_worker,
+                    dropout=args.dropout, max_delay=2, deadline=1,
+                    chaos_seed=0),
+        batch_fn, args.steps, base_seed)
+    single = bench_one(
+        model, lane,
+        FleetConfig(num_workers=1,
+                    probes_per_worker=args.probes_per_worker),
+        batch_fn, args.steps, base_seed)
+
+    floor = args.probes_per_worker * (8 + 4)
+    metrics = {
+        **{f"fleet_{k}": v for k, v in fleet.items()},
+        **{f"single_{k}": v for k, v in single.items()},
+        "zo_bytes_floor_per_worker_step": floor,
+        "zo_bytes_overhead_ratio":
+            fleet["zo_bytes_per_worker_step"] / floor,
+    }
+    print(f"# fleet {args.workers}w: {fleet['wall_s_per_step']:.3f}s/step, "
+          f"ZO {fleet['zo_bytes_per_worker_step']:.1f}B/worker/step "
+          f"(floor {floor}B, x{metrics['zo_bytes_overhead_ratio']:.2f}), "
+          f"tail {fleet['tail_bytes_per_step']:.0f}B/step")
+    print(f"# single 1w: {single['wall_s_per_step']:.3f}s/step")
+    write_bench("fleet", {
+        "arch": cfg.name, "workers": args.workers,
+        "probes_per_worker": args.probes_per_worker, "steps": args.steps,
+        "batch": args.batch, "seq": args.seq, "dropout": args.dropout,
+    }, metrics, out=args.out or None)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,13 +1,13 @@
 """Serving throughput: dense static-batch vs paged continuous batching.
 
 ``PYTHONPATH=src python -m benchmarks.bench_serve --arch qwen3-4b --smoke \
-      --batches 2,4,8 --out bench_serve.json``
+      --batches 2,4,8``
 
 For each batch size, generates the same greedy workload through both
-paths and reports tokens/sec plus paged-pool utilization as JSON:
-
-  {"arch": ..., "results": [{"batch": 4, "dense_tps": ..., "paged_tps":
-   ..., "page_util_peak": ..., "page_util_mean": ...}, ...]}
+paths and reports tokens/sec plus paged-pool utilization, written as
+BENCH_serve.json at the repo root ({name, config, metrics} — the shared
+benchmark schema, benchmarks/bench_util.py; metrics are flattened per
+batch size as ``b<N>_dense_tps`` etc.).
 
 On CPU this measures engine overhead, not kernel speed (the Pallas paged
 kernel only engages on TPU); the point of the JSON is tracking the
@@ -16,13 +16,14 @@ dense/paged ratio and page accounting across PRs.
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import numpy as np
 
 from repro.configs import ServeConfig, get_arch, reduced
 from repro.serve import DenseServer, Engine, SamplingParams
+
+from .bench_util import write_bench
 
 
 def bench_one(cfg, batch: int, prompt_len: int, new_tokens: int,
@@ -85,19 +86,20 @@ def main(argv=None):
     cfg = get_arch(args.arch)
     if args.smoke:
         cfg = reduced(cfg)
-    results = []
+    metrics = {}
     for b in [int(x) for x in args.batches.split(",")]:
         r = bench_one(cfg, b, args.prompt_len, args.tokens, args.page_size)
         print(f"# batch={b}: dense {r['dense_tps']:.1f} tok/s, paged "
               f"{r['paged_tps']:.1f} tok/s, peak pages "
               f"{100 * r['page_util_peak']:.0f}%", flush=True)
-        results.append(r)
-    doc = {"arch": cfg.name, "results": results}
-    payload = json.dumps(doc, indent=2)
-    print(payload)
-    if args.out:
-        with open(args.out, "w") as f:
-            f.write(payload)
+        for k in ("dense_tps", "paged_tps", "engine_steps", "total_pages",
+                  "page_util_peak", "page_util_mean"):
+            metrics[f"b{b}_{k}"] = r[k]
+    write_bench("serve", {
+        "arch": cfg.name, "batches": args.batches,
+        "prompt_len": args.prompt_len, "new_tokens": args.tokens,
+        "page_size": args.page_size,
+    }, metrics, out=args.out or None)
 
 
 if __name__ == "__main__":

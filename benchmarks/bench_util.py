@@ -1,0 +1,22 @@
+"""Shared benchmark output contract.
+
+Every benchmark writes ``BENCH_<name>.json`` at the repo root with the
+schema ``{"name": ..., "config": {...}, "metrics": {...}}`` so the perf
+trajectory is diffable across PRs (one file per benchmark, committed
+runs optional, schema stable). Keep metrics flat: scalar leaves only.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def write_bench(name: str, config: dict, metrics: dict,
+                out: str | None = None) -> Path:
+    doc = {"name": name, "config": config, "metrics": metrics}
+    path = Path(out) if out else REPO_ROOT / f"BENCH_{name}.json"
+    path.write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"# wrote {path}")
+    return path

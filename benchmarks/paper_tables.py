@@ -1,6 +1,6 @@
 """Paper-faithful experiment harnesses (Tables 1-2, Figs. 2-7 analogs).
 
-Datasets are the deterministic synthetic stand-ins (DESIGN.md §9); the
+Datasets are the deterministic synthetic stand-ins (docs/design.md §9); the
 claims being reproduced are the *orderings and gaps between lanes*
 (Full BP > ZO-Feat-Cls1 > ZO-Feat-Cls2 > Full ZO), the memory accounting
 (Eqs. 2-4, 13-15 evaluated exactly), the INT8 speed/memory ratios, and the

@@ -7,7 +7,7 @@ Per (arch x shape x mesh) cell:
   MODEL_FLOPS     = analytic ideal (formula below), ratio vs HLO flops.
 
 HLO flops/bytes use the depth-extrapolated values (scan bodies are counted
-once by cost_analysis; DESIGN.md §7). bytes_accessed on the CPU backend
+once by cost_analysis; docs/design.md §7). bytes_accessed on the CPU backend
 double-counts bf16 traffic as f32 (float normalization); we report the raw
 value and a /2 bf16-adjusted value, and use the adjusted one for the
 bottleneck call.

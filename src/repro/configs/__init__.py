@@ -3,6 +3,7 @@ from .base import (ATTN, MAMBA, RWKV, LaneConfig, ModelConfig, ShapeConfig,
                    SHAPES, TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K,
                    pad_to, reduced)
 from .archs import ARCHS
+from .fleet import FleetConfig
 from .paper_models import LENET5, POINTNET, POINTNET_SYN, LeNet5Config, PointNetConfig
 from .serve import ServeConfig
 
@@ -30,7 +31,7 @@ def cell_matrix():
             if s.long_context and not a.subquadratic:
                 cells.append((a.name, s.name, False,
                               "pure full-attention arch; 500k dense KV cache "
-                              "excluded per assignment (DESIGN.md §6)"))
+                              "excluded per assignment (docs/design.md §6)"))
             else:
                 cells.append((a.name, s.name, True, ""))
     return cells

@@ -2,7 +2,7 @@
 
 Sources are cited per-arch; shapes pairing per the assignment:
 train_4k / prefill_32k / decode_32k always; long_500k only for
-sub-quadratic archs (rwkv6, jamba, mixtral-SWA) — see DESIGN.md §6.
+sub-quadratic archs (rwkv6, jamba, mixtral-SWA) — see docs/design.md §6.
 """
 from .base import ATTN, MAMBA, RWKV, ModelConfig
 

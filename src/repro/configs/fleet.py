@@ -1,0 +1,46 @@
+"""Fleet configuration: simulated edge-device swarm topology and chaos.
+
+A fleet is W workers that jointly own the step's antithetic SPSA probes
+(probe-parallel data distribution, docs/fleet.md): worker w evaluates the
+contiguous probe block [w*m, (w+1)*m) on the step-deterministic batch and
+publishes one ledger record. The chaos knobs drive the deterministic
+in-process transport (fleet/transport.py) so dropout/straggler/crash
+scenarios are reproducible test fixtures, not flaky integration tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class FleetConfig:
+    num_workers: int = 8
+    probes_per_worker: int = 1
+    # -- transport chaos (deterministic in chaos_seed) --
+    dropout: float = 0.0          # P(record lost on the worker->coord link)
+    max_delay: int = 0            # record delivery delay, uniform [0, max]
+    deadline: int = 0             # ticks the coordinator waits per step;
+    #                               delivered-but-later records are
+    #                               stragglers and get probe-masked
+    chaos_seed: int = 0
+    # -- catch-up / persistence --
+    snapshot_every: int = 10      # coordinator keeps a full param snapshot
+    #                               every N steps as a replay base
+    local_ckpt_every: int = 0     # workers checkpoint locally (0 = off)
+    # -- crash schedule: (worker_id, crash_step, down_steps) triples --
+    crashes: Tuple[Tuple[int, int, int], ...] = field(default=())
+
+    @property
+    def n_probes(self) -> int:
+        """Total probes per step across the fleet."""
+        return self.num_workers * self.probes_per_worker
+
+    def probe_block(self, worker: int):
+        m = self.probes_per_worker
+        return range(worker * m, (worker + 1) * m)
+
+    def __post_init__(self):
+        assert 1 <= self.num_workers <= 32, "commit bitmask is u32"
+        assert 1 <= self.probes_per_worker <= 255, "record probe count is u8"
+        assert 0.0 <= self.dropout < 1.0

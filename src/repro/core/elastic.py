@@ -19,7 +19,7 @@ management.
 Multi-probe (n>1) antithetic SPSA with a runtime ``probe_mask`` implements
 straggler mitigation: a dropped probe is masked out and the update is
 renormalized by the surviving count — no recompile, no waiting
-(DESIGN.md §8).
+(docs/design.md §8).
 """
 from __future__ import annotations
 
@@ -72,7 +72,9 @@ def make_elastic_step(loss_fn: Callable[[Any, Any], jax.Array],
     probe_mask: fp32[n_probes]; all-ones for a healthy fleet.
     """
     n = lane.zo_num_probes
-    base_eta_tail = lane.tail_learning_rate or lane.learning_rate
+    # `is None` test: an explicit tail LR of 0.0 means "freeze the tail"
+    base_eta_tail = lane.learning_rate if lane.tail_learning_rate is None \
+        else lane.tail_learning_rate
 
     def _decay(step):
         if lane.lr_decay_every <= 0 or lane.lr_decay_factor == 1.0:

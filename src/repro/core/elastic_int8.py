@@ -40,7 +40,7 @@ def make_int8_elastic_step(forward: Callable, partition_fn: Callable,
         pzero = jnp.float32(pz)
 
         # functional +/- perturbation (the paper's in-place +1/-2/+1 replay
-        # sequence, minus the double-clamp asymmetry; DESIGN.md §9)
+        # sequence, minus the double-clamp asymmetry; docs/design.md §9)
         zo_p = perturb_int8(zo_part, seed, +1, r_max, pzero)
         logits_p, acts_p = forward({**zo_p, **bp_part}, batch["x"])
         zo_m = perturb_int8(zo_part, seed, -1, r_max, pzero)

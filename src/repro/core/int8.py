@@ -104,7 +104,7 @@ def qdense(x: QTensor, w: QTensor) -> QTensor:
 
 
 def qconv2d(x: QTensor, w: QTensor, stride=1) -> QTensor:
-    """int8 conv via im2col + int8 GEMM (TPU adaptation, DESIGN.md §4).
+    """int8 conv via im2col + int8 GEMM (TPU adaptation, docs/design.md §4).
 
     x: [B,H,W,C] int8; w: [kh,kw,C,O] int8.
     """

@@ -10,7 +10,7 @@ kernels/zo_perturb.py for the explicit Pallas version of the same op.
 
 The projected gradient ``g = (l+ - l-)/(2 eps)`` is a *scalar*; in the
 data-parallel setting it is the only thing the ZO part of the model ever
-all-reduces (DESIGN.md §2).
+all-reduces (docs/design.md §2).
 """
 from __future__ import annotations
 

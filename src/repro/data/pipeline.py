@@ -4,7 +4,7 @@ Deterministic-by-step batches (data/synthetic.py) placed directly onto the
 mesh with the training step's input shardings, plus a one-deep host
 prefetch thread so batch generation overlaps device compute. The pipeline
 carries **no state other than the step index** — restart/elastic-remesh
-resume is a pure function of the checkpointed step (DESIGN.md §8).
+resume is a pure function of the checkpointed step (docs/design.md §8).
 """
 from __future__ import annotations
 

@@ -1,4 +1,4 @@
-"""Deterministic synthetic datasets (offline stand-ins; DESIGN.md §9).
+"""Deterministic synthetic datasets (offline stand-ins; docs/design.md §9).
 
 * glyphs       — 28x28 grayscale 10-class "digit-like" images: each class is
                  a distinct parametric stroke pattern + noise + small affine
@@ -12,7 +12,7 @@
 
 Everything is a pure function of (seed, index): the data-pipeline state is
 the step counter alone, which is what makes checkpoint-restart and elastic
-rescaling exact (DESIGN.md §8).
+rescaling exact (docs/design.md §8).
 """
 from __future__ import annotations
 

@@ -1,0 +1,30 @@
+"""repro.fleet — seed-ledger distributed ZO training (docs/fleet.md).
+
+ElasticZO collapses the ZO half of a training step to (probe seed,
+projected-grad scalar) pairs; this subsystem turns that into a wire
+protocol. Workers publish per-step ledger records, a coordinator commits
+each step with a probe mask, and every participant — coordinator, worker,
+late joiner replaying the ledger, and the single-process reference — runs
+the identical canonical update, so the whole fleet stays bit-exact.
+
+Public surface: FleetConfig (configs/fleet.py), Ledger / Record / Commit,
+ChaosTransport, Worker, Coordinator, run_fleet, make_reference_step,
+ReplaySchema / replay / make_replay_fn.
+"""
+from ..configs.fleet import FleetConfig
+from .coordinator import Coordinator
+from .ledger import Commit, Ledger, Record
+from .reference import make_reference_step, reference_state
+from .replay import (ReplaySchema, apply_step, ledger_step_arrays,
+                     make_replay_fn, make_schema, probe_seeds, replay,
+                     step_arrays, step_coeffs)
+from .simulation import FleetResult, run_fleet
+from .transport import ChaosTransport
+from .worker import Worker, make_probe_fn
+
+__all__ = ["FleetConfig", "Ledger", "Record", "Commit", "ChaosTransport",
+           "Worker", "Coordinator", "run_fleet", "FleetResult",
+           "make_probe_fn", "make_reference_step", "reference_state",
+           "ReplaySchema", "make_schema", "apply_step", "replay",
+           "make_replay_fn", "ledger_step_arrays", "step_arrays",
+           "step_coeffs", "probe_seeds"]

@@ -1,0 +1,101 @@
+"""Fleet coordinator: gather records, commit steps, keep the canon.
+
+Per step the coordinator waits ``deadline`` virtual ticks, accepts every
+record that made it, and closes the step with a Commit whose bitmask IS
+the probe mask — straggler mitigation is the same masking/renormalization
+the single-process loop uses for dropped probes (docs/design.md §8),
+promoted to a wire protocol. At least one record is always accepted: if
+the deadline passes empty the coordinator keeps waiting for the earliest
+delivery (infinite-retry semantics in the simulation), so a step can be
+late but never empty.
+
+The coordinator also maintains the canonical parameter stream (applying
+exactly the same replay-module update as everyone else), periodic host
+snapshots that serve as replay bases for crashed workers, and the
+append-only ledger that late joiners slice instead of copying
+checkpoints.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .ledger import Commit, Ledger, Record
+from .replay import ReplaySchema, apply_step, probe_seeds, step_arrays
+from .transport import Fate
+
+
+class Coordinator:
+    def __init__(self, params, schema: ReplaySchema,
+                 keep_snapshots: int = 2):
+        self.schema = schema
+        self.params = params
+        self.ledger = Ledger()
+        self.snapshots: Dict[int, object] = {0: jax.tree.map(np.asarray,
+                                                             params)}
+        self.keep_snapshots = max(keep_snapshots, 1)
+        self.step = 0
+        self.loss_history: List[Tuple[int, float]] = []
+        self.events: List[str] = []
+
+    # ---- step protocol ------------------------------------------------- #
+    def close_step(self, step: int,
+                   arrivals: List[Tuple[Record, Fate]]) -> Tuple[Commit, Dict[int, Record]]:
+        """Deadline-gate the arrivals, commit, advance the canon."""
+        assert step == self.step and arrivals
+        deadline = self.schema.fleet.deadline
+        on_time = [(r, f) for r, f in arrivals
+                   if f.arrived_by(deadline)]
+        if not on_time:
+            # nobody made the deadline: wait for the earliest delivery
+            # (or, if the transport dropped everything, the earliest
+            # retry) — a step is never empty.
+            pool = [(r, f) for r, f in arrivals if f.delivered] or arrivals
+            pick = min(pool, key=lambda rf: (rf[1].delay, rf[0].worker))
+            on_time = [pick]
+            self.events.append(f"step {step}: empty deadline, waited for "
+                               f"worker {pick[0].worker}")
+        accepted_mask = 0
+        records: Dict[int, Record] = {}
+        expect = probe_seeds(self.schema, step)
+        m = self.schema.fleet.probes_per_worker
+        for rec, _ in on_time:
+            w = rec.worker
+            assert np.array_equal(rec.seeds, expect[w * m:(w + 1) * m]), \
+                f"worker {w} seed schedule diverged at step {step}"
+            accepted_mask |= 1 << w
+            records[w] = rec
+        commit = Commit(step, accepted_mask)
+        for w in sorted(records):
+            self.ledger.append_record(records[w])
+        self.ledger.append_commit(commit)
+
+        seeds, deltas, mask, _ = step_arrays(commit, records, self.schema)
+        self.params = apply_step(self.params, step, seeds, deltas, mask,
+                                 records, self.schema)
+        valid = max(float(mask.sum()), 1.0)
+        loss = sum(records[w].loss * m for w in records) / valid
+        self.loss_history.append((step, loss))
+        self.step = step + 1
+        if self.schema.fleet.snapshot_every and \
+                self.step % self.schema.fleet.snapshot_every == 0:
+            self.snapshots[self.step] = jax.tree.map(np.asarray, self.params)
+            # restarts only ever need a recent base (now >= latest
+            # snapshot); don't hold every historical parameter image
+            for s in sorted(self.snapshots)[:-self.keep_snapshots]:
+                del self.snapshots[s]
+        return commit, records
+
+    # ---- catch-up service ---------------------------------------------- #
+    def template(self):
+        """Pytree template for checkpoint restores (structure only)."""
+        return self.params
+
+    def nearest_snapshot(self, step: int):
+        """(base_step, host params) — newest snapshot at or before `step`."""
+        base = max(s for s in self.snapshots if s <= step)
+        return base, jax.tree.map(jnp.asarray, self.snapshots[base])

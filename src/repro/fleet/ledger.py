@@ -1,0 +1,182 @@
+"""The append-only seed ledger: records, commits, binary wire format.
+
+One training step of one worker is a ``Record``:
+
+    R | step u32 | worker u8 | m u8 | loss f32
+      | m x (probe seed u64, loss-diff f32)           <- the ZO part
+      | n_leaves u16 | n x (flat size u32, scale f32) | int8 payload
+
+The ZO part is the paper's punchline made literal: 12 bytes per probe
+(8-byte seed + 4-byte scalar) carries the *entire* ZO gradient of an
+arbitrarily large model half. The int8 payload is the worker's BP-tail
+gradient (sum over its probes), per-tensor scaled (train/compress.py
+wire format, ~1 byte/element of the small tail).
+
+The coordinator closes a step with a ``Commit``:
+
+    C | step u32 | accepted-worker bitmask u32
+
+A commit plus its accepted records is a pure function from params(step)
+to params(step+1) — see fleet/replay.py — so a ledger slice *is* a
+checkpoint delta (train/checkpoint.py delta mode stores exactly that).
+
+Tail leaf shapes/order are out-of-band schema (ReplaySchema), shared at
+enrollment; records carry only flat sizes as a consistency check.
+"""
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_REC_HDR = struct.Struct("<BIBBf")        # tag, step, worker, m, loss
+_PROBE = struct.Struct("<Qf")             # seed u64, loss-diff f32
+_LEAF_HDR = struct.Struct("<If")          # flat size u32, scale f32
+_COMMIT = struct.Struct("<BII")           # tag, step, accepted bitmask
+_TAG_R, _TAG_C = 0x52, 0x43               # 'R', 'C'
+
+
+@dataclass
+class Record:
+    step: int
+    worker: int
+    seeds: np.ndarray                     # uint64 [m]
+    deltas: np.ndarray                    # float32 [m]   (l_plus - l_minus)
+    loss: float                           # mean 0.5*(l+ + l-) over probes
+    tail_q: List[np.ndarray] = field(default_factory=list)   # int8, flat
+    tail_scales: np.ndarray = field(
+        default_factory=lambda: np.zeros((0,), np.float32))
+
+    @property
+    def zo_nbytes(self) -> int:
+        """Wire bytes of the ZO part (header + seed/scalar pairs)."""
+        return _REC_HDR.size + _PROBE.size * len(self.seeds)
+
+    @property
+    def tail_nbytes(self) -> int:
+        return 2 + sum(_LEAF_HDR.size + q.size for q in self.tail_q)
+
+    @property
+    def nbytes(self) -> int:
+        return self.zo_nbytes + self.tail_nbytes
+
+    def to_bytes(self) -> bytes:
+        out = [_REC_HDR.pack(_TAG_R, self.step, self.worker,
+                             len(self.seeds), float(self.loss))]
+        for s, d in zip(self.seeds, self.deltas):
+            out.append(_PROBE.pack(int(s), float(d)))
+        out.append(struct.pack("<H", len(self.tail_q)))
+        for q, sc in zip(self.tail_q, self.tail_scales):
+            out.append(_LEAF_HDR.pack(q.size, float(sc)))
+        for q in self.tail_q:
+            out.append(np.ascontiguousarray(q, np.int8).tobytes())
+        return b"".join(out)
+
+
+@dataclass
+class Commit:
+    step: int
+    accepted: int                         # bitmask over worker ids
+
+    def workers(self, num_workers: int) -> List[int]:
+        return [w for w in range(num_workers) if self.accepted >> w & 1]
+
+    @property
+    def nbytes(self) -> int:
+        return _COMMIT.size
+
+    def to_bytes(self) -> bytes:
+        return _COMMIT.pack(_TAG_C, self.step, self.accepted)
+
+
+class Ledger:
+    """Append-only store of records and commits, with bytes accounting.
+
+    ``records[step][worker]`` holds only records the coordinator accepted
+    (dropped/straggler records never enter the canonical ledger — their
+    probes are masked by the commit instead).
+    """
+
+    def __init__(self):
+        self.records: Dict[int, Dict[int, Record]] = {}
+        self.commits: Dict[int, Commit] = {}
+        self.bytes_zo = 0
+        self.bytes_tail = 0
+
+    @property
+    def nbytes(self) -> int:
+        return self.bytes_zo + self.bytes_tail \
+            + _COMMIT.size * len(self.commits)
+
+    def append_record(self, rec: Record):
+        self.records.setdefault(rec.step, {})[rec.worker] = rec
+        self.bytes_zo += rec.zo_nbytes
+        self.bytes_tail += rec.tail_nbytes
+
+    def append_commit(self, commit: Commit):
+        assert commit.step not in self.commits, "ledger is append-only"
+        self.commits[commit.step] = commit
+
+    def last_step(self) -> Optional[int]:
+        return max(self.commits) if self.commits else None
+
+    def step_entries(self, step: int) -> Tuple[Commit, Dict[int, Record]]:
+        return self.commits[step], self.records.get(step, {})
+
+    # ---- wire / persistence -------------------------------------------- #
+    def slice_bytes(self, lo: int, hi: int) -> bytes:
+        """Serialized commits + accepted records for steps in [lo, hi)."""
+        out = []
+        for step in range(lo, hi):
+            if step not in self.commits:
+                continue
+            out.append(self.commits[step].to_bytes())
+            for w in sorted(self.records.get(step, {})):
+                out.append(self.records[step][w].to_bytes())
+        return b"".join(out)
+
+    def to_bytes(self) -> bytes:
+        if not self.commits:
+            return b""
+        return self.slice_bytes(min(self.commits), max(self.commits) + 1)
+
+    @classmethod
+    def from_bytes(cls, buf: bytes) -> "Ledger":
+        led = cls()
+        off = 0
+        while off < len(buf):
+            tag = buf[off]
+            if tag == _TAG_C:
+                _, step, mask = _COMMIT.unpack_from(buf, off)
+                off += _COMMIT.size
+                led.append_commit(Commit(step, mask))
+            elif tag == _TAG_R:
+                _, step, worker, m, loss = _REC_HDR.unpack_from(buf, off)
+                off += _REC_HDR.size
+                seeds = np.zeros((m,), np.uint64)
+                deltas = np.zeros((m,), np.float32)
+                for i in range(m):
+                    s, d = _PROBE.unpack_from(buf, off)
+                    off += _PROBE.size
+                    seeds[i], deltas[i] = s, np.float32(d)
+                (n_leaves,) = struct.unpack_from("<H", buf, off)
+                off += 2
+                sizes, scales = [], np.zeros((n_leaves,), np.float32)
+                for i in range(n_leaves):
+                    sz, sc = _LEAF_HDR.unpack_from(buf, off)
+                    off += _LEAF_HDR.size
+                    sizes.append(sz)
+                    scales[i] = np.float32(sc)
+                tail_q = []
+                for sz in sizes:
+                    tail_q.append(np.frombuffer(
+                        buf, np.int8, count=sz, offset=off).copy())
+                    off += sz
+                led.append_record(Record(step, worker, seeds, deltas,
+                                         float(np.float32(loss)),
+                                         tail_q, scales))
+            else:
+                raise ValueError(f"bad ledger tag {tag:#x} at offset {off}")
+        return led

@@ -1,0 +1,96 @@
+"""Single-process reference of the fleet semantics, for train_loop.run.
+
+The acceptance bar for repro.fleet is not "close": an 8-worker chaos run
+must reproduce a single-process run bit-exactly. This module is that
+single process: one step function that computes every worker's probe
+block, quantizes every worker's tail with its own error-feedback
+residual, and applies the identical replay-module update — sharing the
+very same jitted callables (worker.make_probe_fn / make_quantize_fn) the
+fleet workers use, so there is no cross-program rounding to hand-wave
+about.
+
+It is a host-side composite (run it with LoopConfig(jit=False)): jitting
+the whole step would re-fuse the shared sub-programs and shift the
+stream by FMA-contraction ulps (see kernels/ref.zo_fused_replay_ref).
+
+Worker-local state (the EF residuals) rides inside ``state.params`` as
+``{"model": ..., "residual": [one tail tree per worker]}`` so restart
+semantics stay a pure function of the checkpointed state.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import LaneConfig
+from ..core.elastic import TrainState
+from .ledger import Commit
+from .replay import ReplaySchema, apply_step, probe_seeds, step_arrays
+from .worker import (compute_record, make_probe_fn, make_quantize_fn,
+                     zero_residual)
+
+
+def reference_state(params, schema: ReplaySchema, seed) -> TrainState:
+    """Initial TrainState with per-worker EF residuals alongside the model."""
+    residual = [zero_residual(schema)
+                for _ in range(schema.fleet.num_workers)]
+    return TrainState({"model": params, "residual": residual},
+                      jnp.int32(0), jnp.asarray(seed))
+
+
+def make_reference_step(loss_fn: Callable, schema: ReplaySchema,
+                        probe_fn=None, quantize_fn=None):
+    """(state, batch, probe_mask) -> (state, metrics), fleet semantics.
+
+    probe_mask fp32[n_probes] is block-constant per worker (the commit
+    bitmask expanded); pass the realized masks of a fleet run via
+    LoopConfig.mask_fn to reproduce it, or a drop-rate stream to simulate
+    one.
+    """
+    lane: LaneConfig = schema.lane
+    fleet = schema.fleet
+    W, m = fleet.num_workers, fleet.probes_per_worker
+    if probe_fn is None:
+        probe_fn = make_probe_fn(loss_fn, lane, schema.partition_fn)
+    if quantize_fn is None:
+        quantize_fn = make_quantize_fn()
+
+    def step(state: TrainState, batch, probe_mask):
+        t = int(state.step)
+        model = state.params["model"]
+        residuals = state.params["residual"]
+        mask = np.asarray(probe_mask, np.float32)
+        assert mask.shape == (W * m,)
+
+        accepted_bits = 0
+        records, new_residuals = {}, []
+        for w in range(W):
+            rec, pending = compute_record(model, residuals[w], batch, t, w,
+                                          schema, probe_fn, quantize_fn)
+            records[w] = rec
+            if mask[w * m] > 0:
+                accepted_bits |= 1 << w
+                new_residuals.append(pending)
+            else:
+                new_residuals.append(zero_residual(schema))
+        commit = Commit(t, accepted_bits)
+        seeds, deltas, cmask, _ = step_arrays(commit, records, schema)
+        new_model = apply_step(model, t, seeds, deltas, cmask, records,
+                               schema)
+        valid = max(float(cmask.sum()), 1.0)
+        loss = sum(records[w].loss * m
+                   for w in commit.workers(W)) / valid
+        g = np.abs(deltas) / np.float32(2.0 * lane.zo_eps)
+        metrics = {"loss": jnp.float32(loss),
+                   "zo_g": jnp.float32(float(np.sum(g)) / (W * m))}
+        return TrainState({"model": new_model, "residual": new_residuals},
+                          state.step + 1, state.seed), metrics
+
+    return step
+
+
+__all__ = ["make_reference_step", "reference_state", "probe_seeds"]

@@ -1,0 +1,241 @@
+"""Canonical ledger semantics: (commit, records) -> parameter update.
+
+Everything that holds model parameters — the coordinator, every worker, a
+late joiner catching up, the delta-checkpoint restore path, and the
+single-process reference (fleet/reference.py) — applies ledger steps
+through the functions in this module, and *only* through them. That is
+the entire bit-exactness story: one implementation of the update, one
+accumulation order, one per-step cast.
+
+Per committed step, with n = fleet probes, mask in {0,1}^n from the
+commit bitmask:
+
+  ZO half    theta <- cast(theta_f32 - sum_i coeff_i * z(seed_i))
+             coeff_i = -eta(step) * clip(delta_i / 2eps) * mask_i / valid
+  BP tail    p <- cast(p_f32 - eta_tail(step) * sum_w dequant(payload_w)
+                                                 / valid)
+
+valid = max(sum mask, 1). A K-step catch-up replays the ZO half in a
+single fused kernel pass (kernels/zo_fused_replay.py; off-TPU the eager
+ref keeps the stream bitwise) and the tail sequentially — the two halves
+touch disjoint leaves, so fusing one and not the other is still exact.
+
+Scalar hyperparameter math (eta decay, clipping, masking) runs host-side
+in strict numpy float32 so every participant derives identical coeffs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import LaneConfig
+from ..configs.fleet import FleetConfig
+from ..core import elastic, prng, zo
+from ..kernels import ops
+from .ledger import Commit, Ledger, Record
+
+
+@dataclass
+class ReplaySchema:
+    """Out-of-band protocol state shared at enrollment.
+
+    Everything a participant needs to turn ledger bytes into a parameter
+    update: the lane hyperparameters, the fleet topology, the base PRNG
+    key (probe seeds are re-derivable, records carrying them is a wire
+    convenience), the ZO/BP partition, and the tail leaf layout that int8
+    payloads are flattened against.
+    """
+    lane: LaneConfig
+    fleet: FleetConfig
+    base_seed: np.ndarray                      # uint32[2] key data
+    partition_fn: Callable[[Any], Tuple[Any, Any]]
+    tail_shapes: List[Tuple[int, ...]] = field(default_factory=list)
+    tail_dtypes: List[Any] = field(default_factory=list)
+    tail_treedef: Any = None
+    # per-step seed memo: W workers + the coordinator + the reference all
+    # derive the same array each step; compute it once (bounded cache)
+    _seed_cache: Dict[int, np.ndarray] = field(default_factory=dict,
+                                               repr=False, compare=False)
+
+    @property
+    def n_probes(self) -> int:
+        return self.fleet.n_probes
+
+
+def make_schema(params, lane: LaneConfig, fleet_cfg: FleetConfig,
+                base_seed, partition_fn=None) -> ReplaySchema:
+    if partition_fn is None:
+        partition_fn = lambda p: elastic.partition(p, lane)  # noqa: E731
+    _, bp_part = partition_fn(params)
+    flat, treedef = jax.tree_util.tree_flatten(bp_part)
+    return ReplaySchema(
+        lane=lane, fleet=fleet_cfg,
+        base_seed=np.asarray(base_seed, np.uint32),
+        partition_fn=partition_fn,
+        tail_shapes=[tuple(x.shape) for x in flat],
+        tail_dtypes=[x.dtype for x in flat],
+        tail_treedef=treedef)
+
+
+def probe_seeds(schema: ReplaySchema, step: int) -> np.ndarray:
+    """uint64[n]: the hash seeds of this step's probe keys.
+
+    Identical to what the worker's probe loop feeds core/prng.py —
+    fold_in(fold_in(base, step), i), collapsed by prng.seed_from_key.
+    """
+    cached = schema._seed_cache.get(step)
+    if cached is not None:
+        return cached
+    base = jax.random.wrap_key_data(jnp.asarray(schema.base_seed))
+    key = jax.random.fold_in(base, step)
+    seeds = np.asarray(
+        [np.uint64(prng.seed_from_key(jax.random.fold_in(key, i)))
+         for i in range(schema.n_probes)], np.uint64)
+    schema._seed_cache[step] = seeds
+    while len(schema._seed_cache) > 64:
+        schema._seed_cache.pop(next(iter(schema._seed_cache)))
+    return seeds
+
+
+def _decay32(lane: LaneConfig, step: int) -> np.float32:
+    if lane.lr_decay_every <= 0 or lane.lr_decay_factor == 1.0:
+        return np.float32(1.0)
+    k = np.float32(np.floor(np.float32(step) / np.float32(lane.lr_decay_every)))
+    return np.power(np.float32(lane.lr_decay_factor), k)
+
+
+def step_coeffs(schema: ReplaySchema, step: int, deltas: np.ndarray,
+                mask: np.ndarray) -> Tuple[np.ndarray, np.float32]:
+    """(coeffs fp32[n], valid) — the ZO scalar pipeline, strict fp32."""
+    lane = schema.lane
+    deltas = np.asarray(deltas, np.float32)
+    mask = np.asarray(mask, np.float32)
+    g = deltas / np.float32(2.0 * lane.zo_eps)
+    if lane.zo_clip is not None and lane.zo_clip > 0:
+        g = np.clip(g, np.float32(-lane.zo_clip), np.float32(lane.zo_clip))
+    g = g * mask
+    valid = np.float32(max(float(mask.sum()), 1.0))
+    eta = np.float32(lane.learning_rate) * _decay32(lane, step)
+    return -(eta * g) / valid, valid
+
+
+def step_arrays(commit: Commit, records: Dict[int, Record],
+                schema: ReplaySchema):
+    """(seeds u64[n], deltas f32[n], mask f32[n], records) for one commit.
+
+    Masked probes carry seed 0 / delta 0 — their coefficient is exactly
+    zero, so the seed value never reaches the parameters. `records` may
+    contain non-accepted entries (the reference computes all of them);
+    only committed workers' blocks are read.
+    """
+    n, m = schema.n_probes, schema.fleet.probes_per_worker
+    seeds = np.zeros((n,), np.uint64)
+    deltas = np.zeros((n,), np.float32)
+    mask = np.zeros((n,), np.float32)
+    for w in commit.workers(schema.fleet.num_workers):
+        rec = records[w]
+        sl = slice(w * m, (w + 1) * m)
+        seeds[sl] = rec.seeds
+        deltas[sl] = rec.deltas
+        mask[sl] = 1.0
+    return seeds, deltas, mask, records
+
+
+def ledger_step_arrays(ledger: Ledger, step: int, schema: ReplaySchema):
+    commit, records = ledger.step_entries(step)
+    return step_arrays(commit, records, schema)
+
+
+def _apply_zo(zo_part, seeds: np.ndarray, coeffs: np.ndarray):
+    """seeds u64 [S, n], coeffs f32 [S, n] over every ZO leaf."""
+    def f(path, leaf):
+        return ops.zo_fused_replay(leaf, seeds.astype(np.uint32), coeffs,
+                                   zo.path_salt(path))
+    return jax.tree_util.tree_map_with_path(f, zo_part)
+
+
+def _dequant_sum(records: Dict[int, Record], accepted: List[int],
+                 schema: ReplaySchema):
+    """sum_w q_w * scale_w over accepted workers, in worker-id order."""
+    acc = None
+    for w in accepted:
+        rec = records[w]
+        leaves = []
+        for q, sc, shape in zip(rec.tail_q, rec.tail_scales,
+                                schema.tail_shapes):
+            leaves.append(jnp.asarray(q, jnp.int8).astype(jnp.float32)
+                          .reshape(shape) * jnp.float32(sc))
+        part = jax.tree_util.tree_unflatten(schema.tail_treedef, leaves)
+        acc = part if acc is None else jax.tree.map(jnp.add, acc, part)
+    return acc
+
+
+def _apply_tail(bp_part, step: int, records, accepted: List[int],
+                valid: np.float32, schema: ReplaySchema):
+    if not jax.tree_util.tree_leaves(bp_part) or not accepted:
+        return bp_part
+    lane = schema.lane
+    avg = _dequant_sum(records, accepted, schema)
+    avg = jax.tree.map(lambda a: a / jnp.float32(valid), avg)
+    base_eta = lane.learning_rate if lane.tail_learning_rate is None \
+        else lane.tail_learning_rate
+    eta = np.float32(base_eta) * _decay32(lane, step)
+    return jax.tree.map(
+        lambda p, a: (p.astype(jnp.float32)
+                      - jnp.float32(eta) * a).astype(p.dtype),
+        bp_part, avg)
+
+
+def apply_step(params, step: int, seeds: np.ndarray, deltas: np.ndarray,
+               mask: np.ndarray, records: Dict[int, Record],
+               schema: ReplaySchema):
+    """One committed step: the canonical params(t) -> params(t+1)."""
+    zo_part, bp_part = schema.partition_fn(params)
+    coeffs, valid = step_coeffs(schema, step, deltas, mask)
+    new_zo = _apply_zo(zo_part, seeds[None, :], coeffs[None, :])
+    m = schema.fleet.probes_per_worker
+    accepted = sorted(w for w in records if mask[w * m] > 0)
+    new_bp = _apply_tail(bp_part, step, records, accepted, valid, schema)
+    return elastic.merge(new_zo, new_bp)
+
+
+def replay(params, ledger: Ledger, schema: ReplaySchema,
+           lo: int, hi: int):
+    """Catch up params from step `lo` to step `hi` by ledger replay.
+
+    The ZO half of all hi-lo steps runs as ONE fused kernel pass per leaf
+    (1R+1W of HBM regardless of how far behind the worker is); the tail
+    (small by construction) replays sequentially. Bitwise equal to having
+    applied every step live.
+    """
+    if hi <= lo:
+        return params
+    per_step, scalar = [], []
+    for step in range(lo, hi):
+        assert step in ledger.commits, f"ledger gap at step {step}"
+        arrays = ledger_step_arrays(ledger, step, schema)
+        per_step.append(arrays)
+        scalar.append(step_coeffs(schema, step, arrays[1], arrays[2]))
+    seeds = np.stack([s for s, _, _, _ in per_step])          # [S, n]
+    all_coeffs = np.stack([c for c, _ in scalar])             # [S, n]
+    zo_part, bp_part = schema.partition_fn(params)
+    new_zo = _apply_zo(zo_part, seeds, all_coeffs)
+    m = schema.fleet.probes_per_worker
+    for i, (_, _, mk, records) in enumerate(per_step):
+        accepted = sorted(w for w in records if mk[w * m] > 0)
+        bp_part = _apply_tail(bp_part, lo + i, records, accepted,
+                              scalar[i][1], schema)
+    return elastic.merge(new_zo, bp_part)
+
+
+def make_replay_fn(schema: ReplaySchema):
+    """Adapter for train/checkpoint.py delta mode: bytes -> replay."""
+    def replay_fn(params, ledger_bytes: bytes, base_step: int, step: int):
+        ledger = Ledger.from_bytes(ledger_bytes)
+        return replay(params, ledger, schema, base_step, step)
+    return replay_fn

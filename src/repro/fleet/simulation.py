@@ -1,0 +1,136 @@
+"""Deterministic fleet simulation: N workers, chaos transport, one canon.
+
+Drives synchronous training rounds over an in-process fleet. All
+randomness (transport fates, crash schedule) is seeded, so a run is a
+reproducible fixture: tests/test_fleet.py replays the realized probe
+masks through the single-process reference and asserts the parameter
+streams are bit-identical.
+
+Per step: alive workers compute records -> chaos transport delivers (or
+not, or late) -> coordinator commits -> commit+records broadcast -> every
+participant applies the canonical update. Crashed workers rejoin by
+ledger replay (fleet/worker.py restart), never by copying the full
+model.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+import jax
+
+from ..configs.base import LaneConfig
+from ..configs.fleet import FleetConfig
+from .coordinator import Coordinator
+from .ledger import Ledger
+from .replay import ReplaySchema, make_schema
+from .transport import ChaosTransport
+from .worker import Worker, make_probe_fn, make_quantize_fn
+
+
+@dataclass
+class FleetResult:
+    coordinator: Coordinator
+    workers: List[Worker]
+    schema: ReplaySchema
+    masks: List[np.ndarray]            # realized per-step probe masks
+    param_trace: List[Any]             # canon after each step (host copies)
+    stats: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def ledger(self) -> Ledger:
+        return self.coordinator.ledger
+
+    @property
+    def params(self):
+        return self.coordinator.params
+
+
+def run_fleet(loss_fn: Callable, params, lane: LaneConfig,
+              fleet_cfg: FleetConfig, batch_fn: Callable[[int], Any],
+              steps: int, base_seed, partition_fn=None,
+              trace: bool = False, worker_ckpt_dirs: Optional[List] = None,
+              log_every: int = 0) -> FleetResult:
+    """Train `steps` rounds on a simulated fleet; return the full state.
+
+    batch_fn(step) must be a pure function of the step index (the repo's
+    data contract, docs/design.md §9) — it is what lets every worker see
+    the same batch without a data channel.
+    """
+    schema = make_schema(params, lane, fleet_cfg, base_seed, partition_fn)
+    probe_fn = make_probe_fn(loss_fn, lane, schema.partition_fn)
+    quantize_fn = make_quantize_fn()
+    transport = ChaosTransport(fleet_cfg)
+    coordinator = Coordinator(params, schema)
+    dirs = worker_ckpt_dirs or [None] * fleet_cfg.num_workers
+    workers = [Worker(w, params, schema, probe_fn, quantize_fn, dirs[w])
+               for w in range(fleet_cfg.num_workers)]
+
+    crash_at: Dict[int, List[tuple]] = {}
+    restart_at: Dict[int, List[int]] = {}
+    for w, cs, down in fleet_cfg.crashes:
+        crash_at.setdefault(cs, []).append((w, cs + down))
+        restart_at.setdefault(cs + down, []).append(w)
+
+    masks, param_trace = [], []
+    bytes_broadcast = 0
+    n_catchups = 0
+    t0 = time.time()
+    for step in range(steps):
+        for w in restart_at.get(step, []):
+            workers[w].restart(coordinator, step)
+            n_catchups += 1
+            coordinator.events.append(f"step {step}: worker {w} rejoined "
+                                      f"via ledger replay")
+        for w, until in crash_at.get(step, []):
+            workers[w].crash()
+            coordinator.events.append(f"step {step}: worker {w} crashed "
+                                      f"(down until {until})")
+        batch = batch_fn(step)
+        arrivals = []
+        for worker in workers:
+            if not worker.alive:
+                continue
+            rec = worker.compute_record(step, batch)
+            fate = transport.fate(step, worker.id)
+            transport.send(rec, fate)
+            arrivals.append((rec, fate))
+        assert arrivals, "crash schedule left the fleet empty"
+        commit, records = coordinator.close_step(step, arrivals)
+        bytes_broadcast += commit.nbytes \
+            + sum(r.nbytes for r in records.values())
+        mask = np.zeros((schema.n_probes,), np.float32)
+        m = fleet_cfg.probes_per_worker
+        for w in commit.workers(fleet_cfg.num_workers):
+            mask[w * m:(w + 1) * m] = 1.0
+        masks.append(mask)
+        for worker in workers:
+            if worker.alive:
+                worker.apply_commit(step, commit, records)
+        if trace:
+            param_trace.append(jax.tree.map(np.asarray, coordinator.params))
+        if log_every and (step % log_every == 0 or step == steps - 1):
+            s, loss = coordinator.loss_history[-1]
+            print(f"[fleet] step {s:5d} loss {loss:.4f} "
+                  f"accepted {bin(commit.accepted).count('1')}/"
+                  f"{fleet_cfg.num_workers}", flush=True)
+
+    led = coordinator.ledger
+    stats = {
+        "steps": steps,
+        "workers": fleet_cfg.num_workers,
+        "wall_s": time.time() - t0,
+        "bytes_uplink": transport.bytes_sent,
+        "bytes_broadcast": bytes_broadcast,
+        "bytes_catchup": sum(w.catchup_bytes for w in workers),
+        "ledger_bytes_zo": led.bytes_zo,
+        "ledger_bytes_tail": led.bytes_tail,
+        "n_dropped": transport.n_dropped,
+        "n_straggled": transport.n_straggled,
+        "n_catchups": n_catchups,
+    }
+    return FleetResult(coordinator, workers, schema, masks, param_trace,
+                       stats)

@@ -1,0 +1,57 @@
+"""Deterministic lossy/latency-injecting in-process transport.
+
+Every (step, worker) message fate — delivered?, delay ticks — is a pure
+function of the chaos seed, so a fleet run with dropouts and stragglers
+is exactly reproducible: rerunning the simulation, the single-process
+reference (fleet/reference.py), and a post-hoc replay all see the same
+probe masks. This is chaos testing as a deterministic fixture, the same
+philosophy as the step-indexed synthetic data (docs/design.md §9).
+
+Physical mapping: "dropped" = the worker->coordinator link lost the
+record; "straggler" = it arrived after the coordinator's per-step
+deadline. Both end up probe-masked in the commit. Commits flow on the
+reliable coordinator->worker broadcast (docs/fleet.md failure model).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..configs.fleet import FleetConfig
+
+
+@dataclass(frozen=True)
+class Fate:
+    delivered: bool
+    delay: int
+
+    def arrived_by(self, deadline: int) -> bool:
+        return self.delivered and self.delay <= deadline
+
+
+class ChaosTransport:
+    def __init__(self, cfg: FleetConfig):
+        self.cfg = cfg
+        self.bytes_sent = 0           # worker -> coordinator, delivered only
+        self.n_dropped = 0
+        self.n_straggled = 0
+
+    def fate(self, step: int, worker: int) -> Fate:
+        """The (delivered, delay) fate of worker's step-`step` record."""
+        rng = np.random.default_rng(
+            np.random.SeedSequence((self.cfg.chaos_seed, step, worker)))
+        delivered = bool(rng.uniform() >= self.cfg.dropout)
+        delay = int(rng.integers(0, self.cfg.max_delay + 1)) \
+            if self.cfg.max_delay else 0
+        return Fate(delivered, delay)
+
+    def send(self, record, fate: Fate) -> bool:
+        """Account a worker->coordinator record send; True if delivered."""
+        if not fate.delivered:
+            self.n_dropped += 1
+            return False
+        self.bytes_sent += record.nbytes
+        if fate.delay > self.cfg.deadline:
+            self.n_straggled += 1
+        return True

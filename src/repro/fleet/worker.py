@@ -1,0 +1,205 @@
+"""Fleet worker: probe evaluation, record production, commit application.
+
+A worker's step has two halves with very different costs:
+
+  * compute (jitted, shared): evaluate its probe block's antithetic loss
+    pairs on the step-deterministic batch and the BP-tail gradient at the
+    perturbed points (Alg. 1's avg_perturbed mode, the same math as
+    core/elastic.py's inner loop);
+  * protocol (host-side, canonical): quantize the tail with error
+    feedback, publish the Record, and on commit receipt apply the step
+    through fleet/replay.py.
+
+``make_probe_fn`` / ``make_quantize_fn`` build ONE jitted callable each
+that every worker *and* the single-process reference share — same
+executable, same inputs, same bits. That, plus the replay-module apply,
+is why W simulated devices and one process produce identical parameter
+streams.
+
+Error-feedback residuals are crash-consistent by protocol: a worker
+whose record is not in the commit (dropped, straggled, or crashed)
+resets its residual, so a restarted worker with a zero residual is
+indistinguishable from an unlucky one — ledger replay needs no residual
+state (docs/fleet.md).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import LaneConfig
+from ..core import elastic, zo
+from ..train import checkpoint as ckpt
+from ..train.compress import compress_tree
+from .ledger import Commit, Record
+from .replay import (ReplaySchema, apply_step, probe_seeds, replay,
+                     step_arrays)
+
+
+def make_probe_fn(loss_fn: Callable, lane: LaneConfig, partition_fn=None):
+    """Jitted (params, batch, step, probe_ids, base_seed) ->
+    (l_plus[m], l_minus[m], tail_grad_sum fp32 tree).
+
+    probe_ids are *global* probe indices: the key schedule is
+    fold_in(fold_in(base, step), probe_id), identical to the reference
+    and to replay.probe_seeds, so probe ownership can move between
+    workers without changing the noise.
+    """
+    if partition_fn is None:
+        partition_fn = lambda p: elastic.partition(p, lane)  # noqa: E731
+    assert lane.bp_grad_mode == "avg_perturbed", \
+        "fleet protocol ships Alg. 1 avg_perturbed tail grads"
+
+    def probe_eval(params, batch, step, probe_ids, base_seed):
+        zo_part, bp_part = partition_fn(params)
+        has_tail = bool(jax.tree_util.tree_leaves(bp_part))
+        base = jax.random.wrap_key_data(base_seed)
+        key = jax.random.fold_in(base, step)
+
+        def tail_loss(bp, zo_pert):
+            return loss_fn(elastic.merge(zo_pert, bp), batch)
+
+        m = probe_ids.shape[0]
+        lps, lms = [], []
+        tail_sum = jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), bp_part)
+        zo_src = zo_part
+        for j in range(m):
+            pk = jax.random.fold_in(key, probe_ids[j])
+            zp = zo.perturb(zo_src, pk, lane.zo_eps)
+            if has_tail:
+                lp, gp = jax.value_and_grad(tail_loss)(bp_part, zp)
+                # sequence minus after plus (activation peaks don't overlap)
+                zo_src, lp = jax.lax.optimization_barrier((zo_src, lp))
+                zm = zo.perturb(zo_src, pk, -lane.zo_eps)
+                lm, gm = jax.value_and_grad(tail_loss)(bp_part, zm)
+                g_tail = jax.tree.map(
+                    lambda a, b: (a.astype(jnp.float32)
+                                  + b.astype(jnp.float32)) * 0.5, gp, gm)
+                tail_sum = jax.tree.map(jnp.add, tail_sum, g_tail)
+            else:
+                lp = loss_fn(elastic.merge(zp, bp_part), batch)
+                zo_src, lp = jax.lax.optimization_barrier((zo_src, lp))
+                zm = zo.perturb(zo_src, pk, -lane.zo_eps)
+                lm = loss_fn(elastic.merge(zm, bp_part), batch)
+            lps.append(lp)
+            lms.append(lm)
+        return jnp.stack(lps), jnp.stack(lms), tail_sum
+
+    return jax.jit(probe_eval)
+
+
+def make_quantize_fn():
+    """Jitted error-feedback int8 compression (train/compress.py)."""
+    return jax.jit(compress_tree)
+
+
+def zero_residual(schema: ReplaySchema):
+    return jax.tree_util.tree_unflatten(
+        schema.tail_treedef,
+        [jnp.zeros(s, jnp.float32) for s in schema.tail_shapes])
+
+
+def compute_record(params, residual, batch, step: int, worker: int,
+                   schema: ReplaySchema, probe_fn, quantize_fn):
+    """(Record, pending_residual) — the one producer of wire records.
+
+    Used verbatim by live workers and the single-process reference so a
+    record's bytes are a pure function of (params, batch, step, worker,
+    residual).
+    """
+    m = schema.fleet.probes_per_worker
+    ids = jnp.arange(worker * m, (worker + 1) * m, dtype=jnp.int32)
+    lp, lm, tail = probe_fn(params, batch, jnp.int32(step), ids,
+                            jnp.asarray(schema.base_seed))
+    lp = np.asarray(lp, np.float32)
+    lm = np.asarray(lm, np.float32)
+    q_tree, s_tree, new_res = quantize_fn(tail, residual)
+    rec = Record(
+        step=step, worker=worker,
+        seeds=probe_seeds(schema, step)[worker * m:(worker + 1) * m],
+        deltas=lp - lm,
+        loss=float(np.float32(np.mean(np.float32(0.5) * (lp + lm)))),
+        tail_q=[np.asarray(x).reshape(-1)
+                for x in jax.tree_util.tree_leaves(q_tree)],
+        tail_scales=np.asarray(
+            [float(s) for s in jax.tree_util.tree_leaves(s_tree)],
+            np.float32))
+    return rec, new_res
+
+
+class Worker:
+    """One simulated edge device. Owns params, an EF residual, and its
+    probe block; everything else arrives over the (chaos) transport."""
+
+    def __init__(self, worker_id: int, params, schema: ReplaySchema,
+                 probe_fn, quantize_fn, ckpt_dir: Optional[str] = None):
+        self.id = worker_id
+        self.schema = schema
+        self.params = params
+        self.residual = zero_residual(schema)
+        self.probe_fn = probe_fn
+        self.quantize_fn = quantize_fn
+        self.ckpt_dir = ckpt_dir
+        self.step = 0
+        self.alive = True
+        self.catchup_bytes = 0
+        self._pending_residual = None
+
+    # ---- live path ----------------------------------------------------- #
+    def compute_record(self, step: int, batch) -> Record:
+        assert self.alive and step == self.step, (self.id, step, self.step)
+        rec, self._pending_residual = compute_record(
+            self.params, self.residual, batch, step, self.id, self.schema,
+            self.probe_fn, self.quantize_fn)
+        return rec
+
+    def apply_commit(self, step: int, commit: Commit, records):
+        assert self.alive and step == self.step
+        seeds, deltas, mask, _ = step_arrays(commit, records, self.schema)
+        self.params = apply_step(self.params, step, seeds, deltas, mask,
+                                 records, self.schema)
+        accepted = bool(commit.accepted >> self.id & 1)
+        self.residual = (self._pending_residual if accepted
+                         else zero_residual(self.schema))
+        self._pending_residual = None
+        self.step = step + 1
+        if self.ckpt_dir and self.step % max(
+                self.schema.fleet.local_ckpt_every, 1) == 0 \
+                and self.schema.fleet.local_ckpt_every:
+            ckpt.save(self.ckpt_dir, self.step, self.params)
+
+    # ---- failure / recovery -------------------------------------------- #
+    def crash(self):
+        """Lose all volatile state (params, residual, pending record)."""
+        self.alive = False
+        self.params = None
+        self.residual = None
+        self._pending_residual = None
+
+    def restart(self, coordinator, now_step: int):
+        """Catch up to `now_step` by ledger replay, not checkpoint copy.
+
+        Base = own local checkpoint if one exists, else the coordinator's
+        nearest snapshot; then replay the [base, now) ledger slice in one
+        fused pass. Residual restarts at zero — by protocol that is also
+        what the commit history implies (crash steps were not accepted).
+        """
+        base_step, base_params = None, None
+        if self.ckpt_dir and ckpt.latest_step(self.ckpt_dir) is not None:
+            base_params, base_step = ckpt.restore(self.ckpt_dir,
+                                                  coordinator.template())
+        if base_step is None or base_step > now_step:
+            base_step, base_params = coordinator.nearest_snapshot(now_step)
+        slice_bytes = coordinator.ledger.slice_bytes(base_step, now_step)
+        self.catchup_bytes += len(slice_bytes)
+        from .ledger import Ledger
+        self.params = replay(base_params, Ledger.from_bytes(slice_bytes),
+                             self.schema, base_step, now_step)
+        self.residual = zero_residual(self.schema)
+        self.step = now_step
+        self.alive = True

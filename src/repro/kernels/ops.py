@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from . import ref
 from .int8_matmul import int8_matmul as _pallas_int8_matmul
 from .paged_attn import paged_attention as _pallas_paged_attention
+from .zo_fused_replay import zo_fused_replay as _pallas_zo_fused_replay
 from .zo_perturb import int8_perturb as _pallas_int8_perturb
 from .zo_perturb import zo_perturb as _pallas_zo_perturb
 
@@ -47,6 +48,22 @@ def zo_perturb(theta, seed, salt: int, scale, *, force_pallas: bool = False,
         return _pallas_zo_perturb(theta, seed, salt, scale,
                                   interpret=interpret)
     return ref.zo_perturb_ref(theta, seed, salt, jnp.asarray(scale))
+
+
+def zo_fused_replay(theta, seeds, coeffs, salt: int, *,
+                    force_pallas: bool = False, interpret: bool = False):
+    """Apply S ledger steps of P (seed, coeff) ZO records in one pass.
+
+    Pallas on TPU (single 1R+1W sweep over theta for the whole catch-up),
+    ref elsewhere. Both paths share the canonical per-step accumulate-then-
+    cast order, so live stepping (S=1 per step) and multi-step replay agree
+    bitwise within a backend — the fleet's catch-up guarantee.
+    """
+    if _on_tpu() or force_pallas:
+        return _pallas_zo_fused_replay(theta, seeds, coeffs, salt,
+                                       interpret=interpret)
+    return ref.zo_fused_replay_ref(theta, jnp.asarray(seeds, jnp.uint32),
+                                   jnp.asarray(coeffs, jnp.float32), salt)
 
 
 def int8_perturb(theta, seed, salt: int, k, r_max, p_zero, *,

@@ -27,6 +27,35 @@ def zo_perturb_ref(theta: jax.Array, seed: jax.Array, salt: int,
     return out.reshape(theta.shape).astype(theta.dtype)
 
 
+def zo_fused_replay_ref(theta: jax.Array, seeds: jax.Array,
+                        coeffs: jax.Array, salt: int):
+    """Apply S ledger steps of P (seed, coeff) probe records to one leaf.
+
+    Canonical fleet update stream (docs/fleet.md): per step, the probe
+    contributions are accumulated in probe order in fp32, subtracted once,
+    and cast to the parameter dtype; the next step starts from that cast
+    value. This is bitwise the live path (S=1 applied per step), which is
+    what makes ledger replay reproduce the canonical parameter stream
+    exactly. seeds uint32 [S, P]; coeffs fp32 [S, P] (0 for masked probes).
+
+    Deliberately a plain python loop over eagerly-dispatched ops: compiling
+    the loop (fori_loop / jit) lets XLA contract the mul-add chain into
+    FMAs, which shifts the stream by ~1 ulp relative to other call sites.
+    Keep every caller on this eager entry point (kernels/ops.py off-TPU).
+    """
+    S, P = seeds.shape
+    shape, dtype = theta.shape, theta.dtype
+    n = theta.size
+    x = theta.reshape(-1).astype(jnp.float32)
+    for s in range(S):
+        inner = jnp.zeros((n,), jnp.float32)
+        for p in range(P):
+            z = prng.normal(seeds[s, p], salt, (n,))
+            inner = inner + coeffs[s, p] * z
+        x = (x - inner).astype(dtype).astype(jnp.float32)
+    return x.reshape(shape).astype(dtype)
+
+
 def int8_perturb_ref(theta: jax.Array, seed: jax.Array, salt: int, k: int,
                      r_max: int, p_zero: jax.Array):
     """Alg. 2 perturbation on an int8 leaf (clamped +/- sparse uniform)."""

@@ -1,0 +1,92 @@
+"""Pallas TPU fused ledger replay: K accumulated ZO records, one pass.
+
+A crashed or late fleet worker catches up by replaying the seed ledger
+(docs/fleet.md): for each missed step s it must apply
+
+    theta <- cast(theta_f32 - sum_p coeff[s,p] * z(seed[s,p]))
+
+where the per-step cast to the parameter dtype is part of the canonical
+update (it is what the live path does one step at a time). Done naively
+that is S full read-modify-write passes over the parameters; this kernel
+performs all S steps in a *single* 1R + 1W pass — each block of theta is
+loaded once, the S-step / P-probe accumulation runs entirely in VREGs
+(z regenerated from the counter hash, exactly like kernels/zo_perturb.py),
+and the block is stored once. HBM traffic for an arbitrarily long catch-up
+is the same as for one training step, which is the whole point of shipping
+scalars instead of checkpoints.
+
+Replay contract: the per-step inner sum runs in probe order, and the
+per-step cast is applied inside the loop, so an S-step replay equals the
+live stream of per-step S=1 applications exactly on any one backend (see
+ref.zo_fused_replay_ref, the dispatch oracle that carries the same
+guarantee off-TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .zo_perturb import BLOCK_ROWS, LANES, _normal_block
+
+
+def _replay_kernel(n_steps, n_probes, seeds_ref, coeffs_ref, salt_ref,
+                   t_ref, o_ref):
+    rows = t_ref.shape[0]
+    row0 = pl.program_id(0) * rows
+    x = t_ref[...].astype(jnp.float32)
+
+    def step_body(s, x):
+        inner = jnp.zeros_like(x)
+        for p in range(n_probes):          # static, small (probes per step)
+            z = _normal_block(jnp.uint32(row0), x.shape,
+                              seeds_ref[s * n_probes + p], salt_ref[0])
+            inner = inner + coeffs_ref[s * n_probes + p] * z
+        # the per-step cast is part of the canonical update stream
+        return (x - inner).astype(o_ref.dtype).astype(jnp.float32)
+
+    x = jax.lax.fori_loop(0, n_steps, step_body, x)
+    o_ref[...] = x.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("salt", "interpret"))
+def zo_fused_replay(theta: jax.Array, seeds: jax.Array, coeffs: jax.Array,
+                    salt: int, *, interpret: bool = False):
+    """Apply S ledger steps of P probes each to one parameter leaf.
+
+    theta: any shape/dtype; seeds uint32 [S, P]; coeffs fp32 [S, P]
+    (coeff = -eta*g/valid per accepted probe, exactly 0 for masked ones).
+    The z stream is bitwise ref.zo_fused_replay_ref; the accumulated AXPY
+    matches it to within FMA-contraction rounding (same 1-ulp contract as
+    kernels/zo_perturb.py). Off-TPU the dispatch (kernels/ops.py) always
+    uses the ref, so the fleet's bit-exact replay guarantee is backend-
+    uniform.
+    """
+    shape, dtype = theta.shape, theta.dtype
+    S, P = seeds.shape
+    n = theta.size
+    rows = -(-n // LANES)
+    rows_pad = -(-rows // BLOCK_ROWS) * BLOCK_ROWS
+    flat = jnp.zeros((rows_pad * LANES,), dtype).at[:n].set(theta.reshape(-1))
+    out = pl.pallas_call(
+        functools.partial(_replay_kernel, S, P),
+        grid=(rows_pad // BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_pad, LANES), dtype),
+        interpret=interpret,
+    )(seeds.reshape(-1).astype(jnp.uint32),
+      coeffs.reshape(-1).astype(jnp.float32),
+      jnp.asarray([salt], jnp.uint32),
+      flat.reshape(rows_pad, LANES))
+    return out.reshape(-1)[:n].reshape(shape)

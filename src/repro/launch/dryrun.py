@@ -5,7 +5,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 For each cell this produces (results/dryrun/<arch>__<shape>__<mesh>.json):
   - memory_analysis: per-device argument/output/temp bytes (fits-in-HBM proof)
   - cost_analysis at full depth, plus depth-2/depth-4 variants for the
-    while-body cost extrapolation (DESIGN.md §7)
+    while-body cost extrapolation (docs/design.md §7)
   - per-device collective bytes parsed from the post-SPMD HLO
     (trip-count-weighted; launch/hlo_analysis.py)
 
@@ -38,7 +38,7 @@ from .mesh import make_production_mesh
 
 RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
 
-# TPU v5e hardware model (roofline constants; see DESIGN.md §7)
+# TPU v5e hardware model (roofline constants; see docs/design.md §7)
 PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # B/s
 ICI_BW = 50e9                # B/s per chip
@@ -121,7 +121,7 @@ def add_depth_extrapolation(rec, cfg, shape, mesh, lane, strategy="tp"):
 
     The full-depth module keeps lax.scan (memory/collective truth), but its
     cost_analysis counts the body once; the unrolled shallow variants give
-    cost(P) = base + P * per_period exactly (DESIGN.md §7).
+    cost(P) = base + P * per_period exactly (docs/design.md §7).
     """
     for d in (2, 4):
         dc = depth_variant(cfg, d)

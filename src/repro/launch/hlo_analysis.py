@@ -1,7 +1,7 @@
 """Post-SPMD HLO analysis: collective-byte accounting with while-loop
 trip-count awareness.
 
-``compiled.cost_analysis()`` counts while bodies once (DESIGN.md §7), so we
+``compiled.cost_analysis()`` counts while bodies once (docs/design.md §7), so we
 parse the compiled HLO text ourselves: track which computation each
 collective lives in, recover each while's trip count from its condition
 computation's integer constant, and multiply.

@@ -13,7 +13,7 @@ Attention supports two sharding plans chosen by ``ShardingRules``:
 All score computation is query-chunked (block-causal) so that 32k-token
 prefill never materializes an SxS score tensor, and sliding-window archs
 only compute the banded blocks. Chunking is a python-level unrolled loop:
-no ``lax.scan``, so ``cost_analysis`` sees every FLOP (DESIGN.md §7).
+no ``lax.scan``, so ``cost_analysis`` sees every FLOP (docs/design.md §7).
 """
 from __future__ import annotations
 

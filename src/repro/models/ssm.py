@@ -1,6 +1,6 @@
 """RWKV6 (Finch) and Mamba blocks in parallel chunked form.
 
-TPU adaptation (DESIGN.md §7): recurrences are evaluated chunk-parallel —
+TPU adaptation (docs/design.md §7): recurrences are evaluated chunk-parallel —
 intra-chunk terms as batched matmuls / cumsums, inter-chunk state carried by
 ``jax.lax.associative_scan`` over chunk boundaries. No ``lax.scan`` over
 time: every FLOP is visible to ``cost_analysis`` and the work is MXU/VPU
@@ -350,7 +350,7 @@ def _mamba_segment(xdt, dt, A, Bc, Cc, carry):
         xdt, dt, Bc, Cc = zp(xdt), zp(dt), zp(Bc), zp(Cc)
         S = S + pad        # dt=0 -> decay exp(0)=1, contribution 0: exact
     NC = S // c
-    # per-step log decay, clamped (DESIGN.md §7)
+    # per-step log decay, clamped (docs/design.md §7)
     la = jnp.maximum(dt[..., None] * A[None, None], -DECAY_CLAMP)  # [B,S,di,N]
     la = la.reshape(B, NC, c, di, N)
     lc = jnp.cumsum(la, axis=2)                              # inclusive

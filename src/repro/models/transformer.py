@@ -4,7 +4,7 @@ Layout: params = {embed, periods (stacked, leading dim = num_periods),
 final_norm, unembed [, pos_embed, encoder]}. The layer stack runs as a
 ``lax.scan`` over periods; a period is one repetition of
 ``cfg.block_pattern`` (1 layer for uniform archs, 8 for Jamba). Caches ride
-the scan as xs/ys. DESIGN.md §7 explains the cost-extrapolation contract:
+the scan as xs/ys. docs/design.md §7 explains the cost-extrapolation contract:
 the scan body is identical at any depth, so the dry-run can compile
 depth-2/depth-4 variants to recover exact per-layer costs.
 """
@@ -175,7 +175,7 @@ def run_periods(periods, x, cfg: ModelConfig, rules, *, positions, mode,
 
     ``unroll=True`` replaces the lax.scan with a python loop over period
     slices — used by the dry-run depth variants so ``cost_analysis`` counts
-    every layer (scan bodies are costed once; DESIGN.md §7).
+    every layer (scan bodies are costed once; docs/design.md §7).
     ``paged``/``full_kv`` ride through to apply_block (serve subsystem);
     the page table is shared by every layer, so it is closed over rather
     than scanned.

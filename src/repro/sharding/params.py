@@ -2,7 +2,7 @@
 
 Weights are TP-sharded over `model` on the dimension the rules pick and
 FSDP-sharded over `data` on a complementary dimension; stacked period
-leaves get an extra unsharded leading (layer) axis. See DESIGN.md §5.
+leaves get an extra unsharded leading (layer) axis. See docs/design.md §5.
 """
 from __future__ import annotations
 

@@ -6,6 +6,14 @@ Layout:  <dir>/step_<N>/
            COMMIT          - written last; a checkpoint without COMMIT is
                              ignored (atomic-commit protocol)
 
+Delta mode (repro.fleet): ``save_delta`` writes ``ledger.bin`` — a seed-
+ledger slice — plus a manifest with ``mode: "delta"`` and ``base_step``
+instead of arrays.npz. Restoring a delta checkpoint loads the full
+checkpoint at ``base_step`` from the same directory and replays the
+slice through a caller-supplied ``replay_fn`` (fleet/replay.make_replay_fn);
+for ElasticZO that is KBs of (seed, scalar) records standing in for a
+full parameter image.
+
 Restore never requires the saving mesh: arrays are saved unsharded
 (host-gathered per leaf) and re-sharded on load via ``jax.device_put`` with
 the *current* mesh's shardings — this is what makes elastic up/down-scaling
@@ -54,31 +62,68 @@ def _flatten(tree) -> Dict[str, Any]:
     return flat
 
 
-def save(ckpt_dir: str | Path, step: int, params, extra: Optional[Dict] = None):
-    """Synchronous sharded-save with atomic commit."""
+def _atomic_commit(ckpt_dir: str | Path, step: int, manifest: Dict,
+                   write_payload) -> Path:
+    """The one copy of the tmp-dir / manifest / COMMIT / rename dance.
+
+    write_payload(tmp_path) writes the checkpoint's files; the COMMIT
+    marker and the rename to the final name happen last, so readers only
+    ever see complete checkpoints (a leftover ``*.tmp`` dir — even one
+    containing COMMIT — is ignored by latest_step/_gc)."""
     d = Path(ckpt_dir) / f"step_{step:08d}"
     tmp = d.with_suffix(".tmp")
     if tmp.exists():
         shutil.rmtree(tmp)
     tmp.mkdir(parents=True)
-    flat = _flatten(params)
-    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
-    np.savez(tmp / "arrays.npz",
-             **{str(i): _to_savable(a) for i, a in enumerate(arrays.values())})
-    manifest = {
-        "step": int(step),
-        "time": time.time(),
-        "keys": list(arrays.keys()),
-        "shapes": [list(a.shape) for a in arrays.values()],
-        "dtypes": [str(a.dtype) for a in arrays.values()],
-        "extra": extra or {},
-    }
+    write_payload(tmp)
     (tmp / "manifest.json").write_text(json.dumps(manifest))
     (tmp / "COMMIT").write_text("ok")
     if d.exists():
         shutil.rmtree(d)
     os.rename(tmp, d)
     return d
+
+
+def _array_manifest(step: int, arrays: Dict[str, np.ndarray],
+                    extra: Optional[Dict]) -> Dict:
+    return {
+        "step": int(step),
+        "mode": "full",
+        "time": time.time(),
+        "keys": list(arrays.keys()),
+        "shapes": [list(a.shape) for a in arrays.values()],
+        "dtypes": [str(a.dtype) for a in arrays.values()],
+        "extra": extra or {},
+    }
+
+
+def _write_arrays(tmp: Path, arrays: Dict[str, np.ndarray]):
+    np.savez(tmp / "arrays.npz",
+             **{str(i): _to_savable(a) for i, a in enumerate(arrays.values())})
+
+
+def save(ckpt_dir: str | Path, step: int, params, extra: Optional[Dict] = None):
+    """Synchronous sharded-save with atomic commit."""
+    flat = _flatten(params)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    return _atomic_commit(ckpt_dir, step, _array_manifest(step, arrays, extra),
+                          lambda tmp: _write_arrays(tmp, arrays))
+
+
+def save_delta(ckpt_dir: str | Path, step: int, base_step: int,
+               ledger_bytes: bytes, extra: Optional[Dict] = None):
+    """Checkpoint step `step` as (base_step, ledger slice) — no arrays.
+
+    The slice must cover commits [base_step, step) and a committed *full*
+    checkpoint must exist at base_step in the same directory (restore
+    chains through it; delta-of-delta is deliberately not supported).
+    """
+    manifest = {"step": int(step), "mode": "delta",
+                "base_step": int(base_step), "time": time.time(),
+                "extra": extra or {}}
+    return _atomic_commit(ckpt_dir, step, manifest,
+                          lambda tmp: (tmp / "ledger.bin")
+                          .write_bytes(ledger_bytes))
 
 
 class AsyncCheckpointer:
@@ -95,24 +140,9 @@ class AsyncCheckpointer:
         snapshot = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
 
         def _write():
-            d = self.dir / f"step_{step:08d}"
-            tmp = d.with_suffix(".tmp")
-            if tmp.exists():
-                shutil.rmtree(tmp)
-            tmp.mkdir(parents=True)
-            np.savez(tmp / "arrays.npz",
-                     **{str(i): _to_savable(a)
-                        for i, a in enumerate(snapshot.values())})
-            manifest = {"step": int(step), "time": time.time(),
-                        "keys": list(snapshot.keys()),
-                        "shapes": [list(a.shape) for a in snapshot.values()],
-                        "dtypes": [str(a.dtype) for a in snapshot.values()],
-                        "extra": extra or {}}
-            (tmp / "manifest.json").write_text(json.dumps(manifest))
-            (tmp / "COMMIT").write_text("ok")
-            if d.exists():
-                shutil.rmtree(d)
-            os.rename(tmp, d)
+            _atomic_commit(self.dir, step,
+                           _array_manifest(step, snapshot, extra),
+                           lambda tmp: _write_arrays(tmp, snapshot))
             self._gc()
 
         self._thread = threading.Thread(target=_write, daemon=True)
@@ -124,7 +154,8 @@ class AsyncCheckpointer:
             self._thread = None
 
     def _gc(self):
-        steps = sorted(self.dir.glob("step_*"))
+        steps = sorted(p for p in self.dir.glob("step_*")
+                       if not p.name.endswith(".tmp"))
         for old in steps[:-self.keep]:
             if (old / "COMMIT").exists():
                 shutil.rmtree(old, ignore_errors=True)
@@ -134,21 +165,40 @@ def latest_step(ckpt_dir: str | Path) -> Optional[int]:
     d = Path(ckpt_dir)
     if not d.exists():
         return None
+    # a crash between COMMIT and the rename can leave step_<N>.tmp with a
+    # COMMIT marker inside — only renamed (complete) dirs count
     steps = [int(p.name.split("_")[1]) for p in d.glob("step_*")
-             if (p / "COMMIT").exists()]
+             if (p / "COMMIT").exists() and not p.name.endswith(".tmp")]
     return max(steps) if steps else None
 
 
 def restore(ckpt_dir: str | Path, template, step: Optional[int] = None,
-            shardings=None) -> Tuple[Any, int]:
+            shardings=None, replay_fn=None) -> Tuple[Any, int]:
     """Restore into `template`'s pytree structure; reshard onto `shardings`
-    (same structure) if given — the saving mesh is irrelevant."""
+    (same structure) if given — the saving mesh is irrelevant.
+
+    Delta checkpoints additionally need ``replay_fn(params, ledger_bytes,
+    base_step, step) -> params`` (fleet/replay.make_replay_fn): the base
+    full checkpoint is restored (and resharded) first, then the ledger
+    slice is replayed on top.
+    """
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no committed checkpoint under {ckpt_dir}")
     d = Path(ckpt_dir) / f"step_{step:08d}"
     manifest = json.loads((d / "manifest.json").read_text())
+    if manifest.get("mode", "full") == "delta":
+        if replay_fn is None:
+            raise ValueError(
+                f"checkpoint at step {step} is a ledger delta (base "
+                f"{manifest['base_step']}); pass replay_fn to restore it")
+        base_step = int(manifest["base_step"])
+        params, _ = restore(ckpt_dir, template, step=base_step,
+                            shardings=shardings)
+        params = replay_fn(params, (d / "ledger.bin").read_bytes(),
+                           base_step, step)
+        return params, int(manifest["step"])
     with np.load(d / "arrays.npz") as z:
         arrays = {k: _from_saved(z[str(i)], manifest["dtypes"][i])
                   for i, k in enumerate(manifest["keys"])}

@@ -1,4 +1,4 @@
-"""Gradient compression for the BP tail (beyond-paper, DESIGN.md §8).
+"""Gradient compression for the BP tail (beyond-paper, docs/design.md §8).
 
 ElasticZO already reduces the ZO part's gradient traffic to one scalar per
 probe; the only tensor collective left in training is the BP-tail gradient
@@ -22,7 +22,8 @@ import jax.numpy as jnp
 def int8_compress(g: jax.Array, residual: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """(g + residual) -> (q int8, scale fp32, new_residual)."""
     x = g.astype(jnp.float32) + residual
-    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30) / 127.0
+    # initial=0 keeps zero-size leaves legal (empty pytree groups)
+    scale = jnp.maximum(jnp.max(jnp.abs(x), initial=0.0), 1e-30) / 127.0
     q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
     new_residual = x - q.astype(jnp.float32) * scale
     return q, scale, new_residual
@@ -64,7 +65,8 @@ def compressed_psum(grads, residuals, axis_name: str):
     def one(g, r):
         x = g.astype(jnp.float32) + r
         scale = jax.lax.pmax(
-            jnp.maximum(jnp.max(jnp.abs(x)), 1e-30), axis_name) / 127.0
+            jnp.maximum(jnp.max(jnp.abs(x), initial=0.0), 1e-30),
+            axis_name) / 127.0
         q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
         new_r = x - q.astype(jnp.float32) * scale
         avg = jax.lax.psum(q.astype(jnp.int32), axis_name).astype(jnp.float32) \

@@ -1,6 +1,6 @@
 """Elastic scaling runtime: survive mesh-size changes mid-training.
 
-The contract (DESIGN.md §8):
+The contract (docs/design.md §8):
   1. training state = (params checkpoint, step);  data state = step;
   2. ZO noise is a pure function of (seed, step, global flat index)
      (core/prng.py), so it is *identical on any mesh*;

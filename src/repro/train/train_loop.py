@@ -30,9 +30,18 @@ class LoopConfig:
     keep: int = 3
     seed: int = 0
     # straggler simulation/mitigation: probability a probe is dropped and
-    # masked out instead of waited for (DESIGN.md §8)
+    # masked out instead of waited for (docs/design.md §8)
     probe_drop_rate: float = 0.0
     n_probes: int = 1
+    # explicit per-step probe masks (fp32[n_probes]), e.g. the realized
+    # commit masks of a fleet run (repro.fleet) replayed through the
+    # single-process reference; overrides the rng drop stream.
+    mask_fn: Optional[Callable[[int], Any]] = None
+    # jit=False runs step_fn as-is: required for host-side composite steps
+    # (fleet/reference.py) whose sub-programs are jitted individually and
+    # must not be re-fused into one program (FMA contraction would shift
+    # the stream by ~1 ulp vs the fleet's update path).
+    jit: bool = True
 
 
 def init_state(params, seed: int) -> TrainState:
@@ -62,7 +71,7 @@ def run(step_fn: Callable, state: TrainState,
     """batch_fn(step) -> device-ready batch dict."""
     saver = ckpt.AsyncCheckpointer(cfg.ckpt_dir, cfg.keep) if cfg.ckpt_dir else None
     jstep = jax.jit(step_fn, donate_argnums=(0,)) \
-        if not isinstance(step_fn, jax.stages.Wrapped) else step_fn
+        if cfg.jit and not isinstance(step_fn, jax.stages.Wrapped) else step_fn
 
     # resume if a committed checkpoint exists
     start = int(state.step)
@@ -80,10 +89,13 @@ def run(step_fn: Callable, state: TrainState,
     history = []
     for step in range(start, cfg.total_steps):
         batch = batch_fn(step)
-        mask = (rng.uniform(size=cfg.n_probes) >=
-                cfg.probe_drop_rate).astype(np.float32)
-        if mask.sum() == 0:
-            mask[0] = 1.0          # never drop every probe
+        if cfg.mask_fn is not None:
+            mask = np.asarray(cfg.mask_fn(step), np.float32)
+        else:
+            mask = (rng.uniform(size=cfg.n_probes) >=
+                    cfg.probe_drop_rate).astype(np.float32)
+            if mask.sum() == 0:
+                mask[0] = 1.0      # never drop every probe
         state, metrics = jstep(state, batch, jnp.asarray(mask))
         if cfg.log_every and (step % cfg.log_every == 0
                               or step == cfg.total_steps - 1):

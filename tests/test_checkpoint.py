@@ -38,6 +38,23 @@ def test_commit_protocol_ignores_partial(tmp_path):
     assert ckpt.latest_step(tmp_path) == 5
 
 
+def test_commit_protocol_ignores_tmp_leftover(tmp_path):
+    """A crash between writing COMMIT and the rename leaves step_<N>.tmp
+    *containing* COMMIT; it must be invisible, not a parse crash."""
+    p = _params()
+    ckpt.save(tmp_path, 5, p)
+    tmp = tmp_path / "step_00000009.tmp"
+    tmp.mkdir()
+    (tmp / "COMMIT").write_text("ok")
+    assert ckpt.latest_step(tmp_path) == 5
+    q, step = ckpt.restore(tmp_path, p)
+    assert step == 5
+    saver = ckpt.AsyncCheckpointer(tmp_path, keep=1)
+    saver.save(6, p)
+    saver.wait()                        # _gc must also skip the .tmp dir
+    assert ckpt.latest_step(tmp_path) == 6
+
+
 def test_async_checkpointer(tmp_path):
     p = _params()
     saver = ckpt.AsyncCheckpointer(tmp_path, keep=2)
@@ -52,7 +69,7 @@ def test_async_checkpointer(tmp_path):
 
 def test_elastic_reshard_restore(tmp_path):
     """Save from a (2,2) mesh layout, restore onto (4,1): the elastic
-    re-scaling path (DESIGN.md §8). Uses 4 fake CPU devices via shardings
+    re-scaling path (docs/design.md §8). Uses 4 fake CPU devices via shardings
     only when multiple devices exist; otherwise exercises the same code
     path with None shardings."""
     from jax.sharding import NamedSharding, PartitionSpec as P

@@ -1,0 +1,190 @@
+"""repro.fleet acceptance: chaos fleet == single process, bit-exactly.
+
+One 8-worker run with transport dropout, stragglers, and a mid-run
+worker crash/rejoin is shared by the tests below (module fixture). The
+bar everywhere is array_equal, not allclose — the protocol's whole point
+(docs/fleet.md).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import FleetConfig, LaneConfig, ShapeConfig, get_arch, reduced
+from repro.core import api
+from repro.data.synthetic import token_batch
+from repro.fleet import (Ledger, make_reference_step, make_replay_fn,
+                         reference_state, run_fleet)
+from repro.sharding.rules import ShardingRules
+from repro.train import checkpoint as ckpt
+from repro.train.train_loop import LoopConfig, run
+
+WORKERS = 8
+STEPS = 8
+CRASH = (5, 3, 3)        # worker 5 dies at step 3, rejoins at step 6
+
+
+def _bitwise_equal(a, b):
+    return all(jnp.array_equal(x, y)
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+@pytest.fixture(scope="module")
+def fleet_run():
+    cfg = reduced(get_arch("llama3-8b"), num_layers=2, d_model=32,
+                  num_heads=2, num_kv_heads=2, head_dim=16, d_ff=64,
+                  vocab_size=128)
+    lane = LaneConfig(lane="elastic_zo", bp_tail_layers=1,
+                      learning_rate=5e-2, zo_eps=1e-3)
+    shape = ShapeConfig("t", seq_len=16, global_batch=2, kind="train")
+    model = api.build(cfg, shape, lane, ShardingRules(None, cfg, shape))
+    params = model.init(jax.random.key(0))
+    base_seed = jax.random.key_data(jax.random.key(1))
+
+    def batch_fn(step):
+        x, y, m = token_batch(2, 16, cfg.vocab_size, seed=1, step=step)
+        return {"tokens": jnp.asarray(x), "labels": jnp.asarray(y),
+                "mask": jnp.asarray(m)}
+
+    fleet_cfg = FleetConfig(num_workers=WORKERS, probes_per_worker=1,
+                            dropout=0.25, max_delay=2, deadline=1,
+                            chaos_seed=3, snapshot_every=4,
+                            crashes=(CRASH,))
+    res = run_fleet(model.loss_fn, params, lane, fleet_cfg, batch_fn,
+                    steps=STEPS, base_seed=base_seed, trace=True)
+    return dict(res=res, model=model, params=params, lane=lane,
+                batch_fn=batch_fn, base_seed=base_seed)
+
+
+def test_chaos_run_exercised_the_failure_paths(fleet_run):
+    res = fleet_run["res"]
+    assert res.stats["n_dropped"] > 0, "dropout chaos never fired"
+    assert res.stats["n_straggled"] > 0, "latency chaos never fired"
+    assert res.stats["n_catchups"] == 1
+    assert res.stats["bytes_catchup"] > 0, \
+        "rejoin should have replayed a ledger slice"
+    # crashed worker's probes masked while down, live again after rejoin
+    w, cs, down = CRASH
+    for t in range(cs, cs + down):
+        assert res.masks[t][w] == 0.0
+    # after rejoin the worker publishes again (its records can still hit
+    # transport chaos, so "accepted at least once", not "immediately")
+    assert any(res.masks[t][w] == 1.0 for t in range(cs + down, STEPS))
+    # some step had a partial (but never empty) commit
+    accepted = np.array([m.sum() for m in res.masks])
+    assert accepted.min() >= 1 and accepted.max() <= WORKERS
+    assert (accepted < WORKERS).any()
+
+
+def test_workers_bitwise_in_sync_with_coordinator(fleet_run):
+    """Every worker — including the crashed-and-replayed one — holds the
+    canonical parameters, bit for bit."""
+    res = fleet_run["res"]
+    for w in res.workers:
+        assert w.alive and w.step == STEPS
+        assert _bitwise_equal(w.params, res.params), f"worker {w.id}"
+
+
+def test_fleet_reproduces_single_process_reference(fleet_run):
+    """The acceptance bar: the 8-worker chaos run's canonical parameter
+    stream == train_loop.run over the single-process reference step with
+    the realized probe masks, bit-exactly at every step."""
+    res, model = fleet_run["res"], fleet_run["model"]
+    step_fn = make_reference_step(model.loss_fn, res.schema)
+    state = reference_state(fleet_run["params"], res.schema,
+                            fleet_run["base_seed"])
+    trace = []
+
+    def recording_step(s, batch, mask):
+        s2, metrics = step_fn(s, batch, mask)
+        trace.append(jax.tree.map(np.asarray, s2.params["model"]))
+        return s2, metrics
+
+    loop = LoopConfig(total_steps=STEPS, log_every=0,
+                      n_probes=res.schema.n_probes,
+                      mask_fn=lambda t: res.masks[t], jit=False)
+    state, _ = run(recording_step, state, fleet_run["batch_fn"], loop)
+    assert len(trace) == STEPS == len(res.param_trace)
+    for t, (a, b) in enumerate(zip(res.param_trace, trace)):
+        assert _bitwise_equal(a, b), f"param stream diverged at step {t}"
+
+
+def test_delta_checkpoint_restore(fleet_run, tmp_path):
+    """save_delta(base_step, ledger slice) + restore(replay_fn) lands on
+    the canonical params bit-exactly."""
+    res = fleet_run["res"]
+    base_step, base = res.coordinator.nearest_snapshot(STEPS - 1)
+    assert base_step < STEPS, "want a real replay, not a trivial one"
+    ckpt.save(tmp_path, base_step, base)
+    ckpt.save_delta(tmp_path, STEPS, base_step,
+                    res.ledger.slice_bytes(base_step, STEPS))
+    assert ckpt.latest_step(tmp_path) == STEPS
+    restored, at = ckpt.restore(tmp_path, fleet_run["params"],
+                                replay_fn=make_replay_fn(res.schema))
+    assert at == STEPS
+    assert _bitwise_equal(restored, res.params)
+    # a delta checkpoint without replay_fn must refuse, not mis-restore
+    with pytest.raises(ValueError, match="ledger delta"):
+        ckpt.restore(tmp_path, fleet_run["params"])
+
+
+def test_ledger_roundtrip_and_wire_budget(fleet_run):
+    res = fleet_run["res"]
+    led = res.ledger
+    led2 = Ledger.from_bytes(led.to_bytes())
+    assert led2.commits.keys() == led.commits.keys()
+    for t, recs in led.records.items():
+        for w, r in recs.items():
+            r2 = led2.records[t][w]
+            assert (r2.step, r2.worker) == (r.step, r.worker)
+            assert np.array_equal(r2.seeds, r.seeds)
+            assert np.array_equal(r2.deltas, r.deltas)
+            assert r2.loss == r.loss
+            assert np.array_equal(r2.tail_scales, r.tail_scales)
+            assert all(np.array_equal(a, b)
+                       for a, b in zip(r2.tail_q, r.tail_q))
+    assert led2.bytes_zo == led.bytes_zo
+    # ZO wire bytes per worker-record within 2x of the protocol floor
+    # n_probes * (8 + 4): u64 seed + f32 loss-diff per probe
+    n_records = sum(len(t) for t in led.records.values())
+    floor = res.schema.fleet.probes_per_worker * (8 + 4)
+    assert led.bytes_zo / n_records <= 2 * floor
+
+
+def test_multi_probe_fleet_matches_reference(tmp_path):
+    """Smaller, denser variant: 3 workers x 2 probes, full_zo lane (no
+    tail payloads on the wire), ledger replay from a fresh joiner."""
+    cfg = reduced(get_arch("llama3-8b"), num_layers=2, d_model=32,
+                  num_heads=2, num_kv_heads=2, head_dim=16, d_ff=64,
+                  vocab_size=128)
+    lane = LaneConfig(lane="full_zo", zo_num_probes=2,
+                      learning_rate=5e-2, zo_eps=1e-3)
+    shape = ShapeConfig("t", seq_len=16, global_batch=2, kind="train")
+    model = api.build(cfg, shape, lane, ShardingRules(None, cfg, shape))
+    params = model.init(jax.random.key(2))
+    base_seed = jax.random.key_data(jax.random.key(3))
+
+    def batch_fn(step):
+        x, y, m = token_batch(2, 16, cfg.vocab_size, seed=2, step=step)
+        return {"tokens": jnp.asarray(x), "labels": jnp.asarray(y),
+                "mask": jnp.asarray(m)}
+
+    fleet_cfg = FleetConfig(num_workers=3, probes_per_worker=2,
+                            dropout=0.3, chaos_seed=11, snapshot_every=10)
+    res = run_fleet(model.loss_fn, params, lane, fleet_cfg, batch_fn,
+                    steps=4, base_seed=base_seed, trace=True)
+    # records carry no tail payload in full_zo
+    rec = next(iter(res.ledger.records[0].values()))
+    assert rec.tail_q == [] and rec.zo_nbytes == 11 + 2 * 12
+
+    step_fn = make_reference_step(model.loss_fn, res.schema)
+    state = reference_state(params, res.schema, base_seed)
+    loop = LoopConfig(total_steps=4, log_every=0, n_probes=6,
+                      mask_fn=lambda t: res.masks[t], jit=False)
+    state, _ = run(step_fn, state, batch_fn, loop)
+    assert _bitwise_equal(state.params["model"], res.params)
+
+    # a brand-new joiner replays the whole ledger from step 0
+    joined = make_replay_fn(res.schema)(params, res.ledger.to_bytes(), 0, 4)
+    assert _bitwise_equal(joined, res.params)

@@ -1,18 +1,26 @@
-"""Fleet training: wall-clock and bytes-on-wire vs single-worker.
+"""Fleet training: wall-clock and bytes-on-wire, fp32 vs int8 lanes.
 
-``PYTHONPATH=src python -m benchmarks.bench_fleet --arch llama3-8b \
-      --smoke --workers 8 --steps 10 --dropout 0.1``
+``PYTHONPATH=src python -m benchmarks.bench_fleet --workers 8 --steps 10``
 
-Runs the same workload twice — a W-worker chaos fleet (repro.fleet) and
-a single-worker fleet (the degenerate W=1 deployment, no chaos) — and
-reports wall-clock, per-step bytes on the wire split into the ZO scalar
-part and the int8 BP-tail part, and the ZO bytes/worker/step against the
-protocol floor of ``probes_per_worker * (8 + 4)`` bytes (one u64 seed +
-one f32 loss-diff per probe; acceptance bar: within 2x, the header is
-the only overhead). Writes BENCH_fleet.json ({name, config, metrics}).
+Runs the seed-ledger fleet (repro.fleet) in both numerics lanes and a
+single-worker fp32 control:
+
+  * fp32 (``--arch`` LM, elastic_zo): 12 B/probe ZO records (u64 seed +
+    f32 loss-diff) + error-feedback int8 tail payloads;
+  * int8 (LeNet-5, ElasticZO-INT8 / Alg. 2): **9 B/probe** ZO records
+    (u64 seed + ternary sign byte, record v2) + exact int8 NITI tail
+    payloads;
+  * single (1 worker, no chaos): the degenerate deployment baseline.
+
+Reports per-step wall-clock and the wire split (ZO scalars vs tail
+payload), the ZO bytes/worker/step against each lane's protocol floor
+(probes x 12 B fp32, probes x 9 B int8; acceptance: within 2x — the
+record header is the only overhead), and the fp32/int8 ratios. Writes
+BENCH_fleet.json ({name, config, metrics}).
 
 On CPU wall-clock measures protocol + engine overhead, not kernel speed;
-the bytes accounting is exact on any backend.
+the bytes accounting is exact on any backend. ``--fast`` shrinks steps
+for the CI bench-smoke job.
 """
 from __future__ import annotations
 
@@ -30,15 +38,17 @@ from repro.sharding.rules import ShardingRules
 from .bench_util import write_bench
 
 
-def bench_one(model, lane, fleet_cfg, batch_fn, steps, base_seed):
-    res = run_fleet(model.loss_fn, model.init(jax.random.key(0)), lane,
-                    fleet_cfg, batch_fn, steps=steps, base_seed=base_seed)
+def summarize(res, steps):
     s = res.stats
     n_records = sum(len(t) for t in res.ledger.records.values())
+    # step 0 always holds >= 1 record: the coordinator force-accepts the
+    # earliest arrival when everything misses the deadline
+    some_rec = next(iter(res.ledger.records[0].values()))
     return {
         "wall_s_per_step": s["wall_s"] / steps,
         "zo_bytes_per_step": s["ledger_bytes_zo"] / steps,
         "zo_bytes_per_worker_step": s["ledger_bytes_zo"] / max(n_records, 1),
+        "zo_bytes_per_probe": some_rec.zo_probe_nbytes,
         "tail_bytes_per_step": s["ledger_bytes_tail"] / steps,
         "uplink_bytes_per_step": s["bytes_uplink"] / steps,
         "n_dropped": s["n_dropped"],
@@ -47,19 +57,9 @@ def bench_one(model, lane, fleet_cfg, batch_fn, steps, base_seed):
     }
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3-8b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--workers", type=int, default=8)
-    ap.add_argument("--probes-per-worker", type=int, default=1)
-    ap.add_argument("--steps", type=int, default=10)
-    ap.add_argument("--batch", type=int, default=2)
-    ap.add_argument("--seq", type=int, default=32)
-    ap.add_argument("--dropout", type=float, default=0.1)
-    ap.add_argument("--out", default="")
-    args = ap.parse_args(argv)
-
+def make_fp32_setup(args):
+    """(model, lane, batch_fn) built once and shared by the chaos fleet
+    and the single-worker control run."""
     cfg = get_arch(args.arch)
     if args.smoke:
         cfg = reduced(cfg)
@@ -69,7 +69,6 @@ def main(argv=None):
     shape = ShapeConfig("bench_fleet", seq_len=args.seq,
                         global_batch=args.batch, kind="train")
     model = api.build(cfg, shape, lane, ShardingRules(None, cfg, shape))
-    base_seed = jax.random.key_data(jax.random.key(1))
 
     def batch_fn(step):
         x, y, m = token_batch(args.batch, args.seq, cfg.vocab_size,
@@ -77,34 +76,103 @@ def main(argv=None):
         return {"tokens": jnp.asarray(x), "labels": jnp.asarray(y),
                 "mask": jnp.asarray(m)}
 
-    fleet = bench_one(
-        model, lane,
-        FleetConfig(num_workers=args.workers,
-                    probes_per_worker=args.probes_per_worker,
-                    dropout=args.dropout, max_delay=2, deadline=1,
-                    chaos_seed=0),
-        batch_fn, args.steps, base_seed)
-    single = bench_one(
-        model, lane,
-        FleetConfig(num_workers=1,
-                    probes_per_worker=args.probes_per_worker),
-        batch_fn, args.steps, base_seed)
+    return model, lane, batch_fn
 
-    floor = args.probes_per_worker * (8 + 4)
-    metrics = {
-        **{f"fleet_{k}": v for k, v in fleet.items()},
-        **{f"single_{k}": v for k, v in single.items()},
-        "zo_bytes_floor_per_worker_step": floor,
-        "zo_bytes_overhead_ratio":
-            fleet["zo_bytes_per_worker_step"] / floor,
-    }
-    print(f"# fleet {args.workers}w: {fleet['wall_s_per_step']:.3f}s/step, "
-          f"ZO {fleet['zo_bytes_per_worker_step']:.1f}B/worker/step "
-          f"(floor {floor}B, x{metrics['zo_bytes_overhead_ratio']:.2f}), "
-          f"tail {fleet['tail_bytes_per_step']:.0f}B/step")
-    print(f"# single 1w: {single['wall_s_per_step']:.3f}s/step")
+
+def bench_fp32(setup, fleet_cfg, steps):
+    model, lane, batch_fn = setup
+    base_seed = jax.random.key_data(jax.random.key(1))
+    res = run_fleet(model.loss_fn, model.init(jax.random.key(0)), lane,
+                    fleet_cfg, batch_fn, steps=steps, base_seed=base_seed)
+    return summarize(res, steps)
+
+
+def bench_int8(args, fleet_cfg, steps):
+    # the one int8 deployment assembly, shared with the fleet CLI
+    from repro.launch.fleet import lenet_int8_fleet_setup
+    params, lane, partition_fn, probe_fn, batch_fn = \
+        lenet_int8_fleet_setup(bp_tail_layers=1,
+                               probes=args.probes_per_worker,
+                               batch=args.batch, seed=0)
+    base_seed = jax.random.key_data(jax.random.key(1))
+    res = run_fleet(None, params, lane, fleet_cfg, batch_fn, steps=steps,
+                    base_seed=base_seed, partition_fn=partition_fn,
+                    probe_fn=probe_fn)
+    return summarize(res, steps)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--lane", default="both",
+                    choices=["both", "fp32", "int8"])
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--probes-per-worker", type=int, default=1)
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--dropout", type=float, default=0.1)
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke scale (fewer steps, reduced arch)")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+    if args.fast:
+        args.smoke = True
+        args.steps = min(args.steps, 4)
+
+    chaos = FleetConfig(num_workers=args.workers,
+                        probes_per_worker=args.probes_per_worker,
+                        dropout=args.dropout, max_delay=2, deadline=1,
+                        chaos_seed=0)
+    calm = FleetConfig(num_workers=1,
+                       probes_per_worker=args.probes_per_worker)
+
+    metrics, arch_name = {}, "-"
+    if args.lane in ("both", "fp32"):
+        setup = make_fp32_setup(args)
+        arch_name = setup[0].cfg.name
+        fleet = bench_fp32(setup, chaos, args.steps)
+        single = bench_fp32(setup, calm, args.steps)
+        floor = args.probes_per_worker * 12
+        metrics.update({f"fleet_{k}": v for k, v in fleet.items()})
+        metrics.update({f"single_{k}": v for k, v in single.items()})
+        metrics["zo_bytes_floor_per_worker_step"] = floor
+        metrics["zo_bytes_overhead_ratio"] = \
+            fleet["zo_bytes_per_worker_step"] / floor
+        print(f"# fp32 fleet {args.workers}w: "
+              f"{fleet['wall_s_per_step']:.3f}s/step, "
+              f"ZO {fleet['zo_bytes_per_worker_step']:.1f}B/worker/step "
+              f"(floor {floor}B, x{metrics['zo_bytes_overhead_ratio']:.2f}),"
+              f" tail {fleet['tail_bytes_per_step']:.0f}B/step")
+        print(f"# fp32 single 1w: {single['wall_s_per_step']:.3f}s/step")
+    if args.lane in ("both", "int8"):
+        i8 = bench_int8(args, chaos, args.steps)
+        floor8 = args.probes_per_worker * 9
+        metrics.update({f"int8_fleet_{k}": v for k, v in i8.items()})
+        metrics["int8_zo_bytes_floor_per_worker_step"] = floor8
+        metrics["int8_zo_bytes_overhead_ratio"] = \
+            i8["zo_bytes_per_worker_step"] / floor8
+        print(f"# int8 fleet {args.workers}w: "
+              f"{i8['wall_s_per_step']:.3f}s/step, "
+              f"ZO {i8['zo_bytes_per_worker_step']:.1f}B/worker/step "
+              f"({i8['zo_bytes_per_probe']}B/probe, floor {floor8}B), "
+              f"tail {i8['tail_bytes_per_step']:.0f}B/step")
+    if args.lane == "both":
+        metrics["int8_over_fp32_zo_bytes"] = \
+            metrics["int8_fleet_zo_bytes_per_step"] \
+            / metrics["fleet_zo_bytes_per_step"]
+        metrics["int8_over_fp32_wall"] = \
+            metrics["int8_fleet_wall_s_per_step"] \
+            / metrics["fleet_wall_s_per_step"]
+        print(f"# int8/fp32: ZO bytes x"
+              f"{metrics['int8_over_fp32_zo_bytes']:.2f}, "
+              f"step-time x{metrics['int8_over_fp32_wall']:.2f} "
+              f"(different models — the bytes ratio is the protocol "
+              f"claim, 9/12 per probe)")
+
     write_bench("fleet", {
-        "arch": cfg.name, "workers": args.workers,
+        "arch": arch_name, "lane": args.lane, "workers": args.workers,
         "probes_per_worker": args.probes_per_worker, "steps": args.steps,
         "batch": args.batch, "seq": args.seq, "dropout": args.dropout,
     }, metrics, out=args.out or None)

@@ -2,51 +2,56 @@
 
 ``PYTHONPATH=src python -m benchmarks.run [--fast] [--section NAME]``
 
-Prints ``name,us_per_call,derived`` CSV rows (plus human-readable tables
-as '#'-prefixed comment lines).
+Each section prints a human-readable '#'-prefixed table and returns a
+flat metrics dict; the driver merges them into ``BENCH_paper.json`` on
+the standardized bench_util schema ({name, config, metrics}) so the
+paper-reproduction trajectory is diffable across PRs like every other
+benchmark (BENCH_fleet.json, BENCH_serve.json).
 """
 from __future__ import annotations
 
 import argparse
 import json
-import sys
 import time
 from pathlib import Path
 
-
-def emit(name, us, derived=""):
-    print(f"{name},{us},{derived}", flush=True)
+from .bench_util import write_bench
 
 
 def section_accuracy(fast: bool):
     from . import paper_tables as pt
+    metrics = {}
     steps = 150 if fast else 800
     t0 = time.perf_counter()
     res = pt.lenet_lanes(steps=steps)
     dt = (time.perf_counter() - t0) * 1e6 / steps
     order = ["full_zo", "zo_feat_cls2", "zo_feat_cls1", "full_bp"]
     accs = {k: res[k][0] for k in order}
-    print(f"# Table1(FP32 glyphs): " +
+    print("# Table1(FP32 glyphs): " +
           " ".join(f"{k}={accs[k]*100:.1f}%" for k in order))
-    emit("table1_fp32_lenet", f"{dt:.0f}",
-         ";".join(f"{k}={accs[k]:.4f}" for k in order))
+    metrics["table1_fp32_lenet_us_per_step"] = dt
+    metrics.update({f"table1_fp32_lenet_acc_{k}": accs[k] for k in order})
 
     t0 = time.perf_counter()
     res8 = pt.lenet_int8_lanes(steps=steps, loss_mode="int")
     dt8 = (time.perf_counter() - t0) * 1e6 / steps
     accs8 = {k: res8[k][0] for k in res8}
-    print(f"# Table1(INT8* glyphs): " +
+    print("# Table1(INT8* glyphs): " +
           " ".join(f"{k}={v*100:.1f}%" for k, v in accs8.items()))
-    emit("table1_int8star_lenet", f"{dt8:.0f}",
-         ";".join(f"{k}={v:.4f}" for k, v in accs8.items()))
+    metrics["table1_int8star_lenet_us_per_step"] = dt8
+    metrics.update({f"table1_int8star_lenet_acc_{k}": v
+                    for k, v in accs8.items()})
 
+    psteps = 100 if fast else 400
     t0 = time.perf_counter()
-    resp = pt.pointnet_lanes(steps=100 if fast else 400)
-    dtp = (time.perf_counter() - t0) * 1e6 / max(100 if fast else 400, 1)
-    print(f"# Table1(PointNet clouds): " +
+    resp = pt.pointnet_lanes(steps=psteps)
+    dtp = (time.perf_counter() - t0) * 1e6 / psteps
+    print("# Table1(PointNet clouds): " +
           " ".join(f"{k}={v[0]*100:.1f}%" for k, v in resp.items()))
-    emit("table1_pointnet", f"{dtp:.0f}",
-         ";".join(f"{k}={v[0]:.4f}" for k, v in resp.items()))
+    metrics["table1_pointnet_us_per_step"] = dtp
+    metrics.update({f"table1_pointnet_acc_{k}": v[0]
+                    for k, v in resp.items()})
+    return metrics
 
 
 def section_finetune(fast: bool):
@@ -57,6 +62,7 @@ def section_finetune(fast: bool):
     from repro.configs import LaneConfig
     from repro.core.elastic import TrainState, make_elastic_step
     from repro.data.synthetic import glyphs
+    metrics = {}
     steps = 100 if fast else 400
     # pretrain with BP on upright glyphs (paper: 1-100 epochs of BP)
     params = lenet.init_lenet5(jax.random.key(7))
@@ -80,14 +86,18 @@ def section_finetune(fast: bool):
         res = pt.lenet_lanes(steps=steps, rotate=deg, init_params=pre,
                              zo_lr=5e-3)
         dt = (time.perf_counter() - t0) * 1e6 / steps
-        row = ";".join(f"{k}={v[0]:.4f}" for k, v in res.items())
         print(f"# Table2(rot{deg}): before={acc0*100:.1f}% " +
               " ".join(f"{k}={v[0]*100:.1f}%" for k, v in res.items()))
-        emit(f"table2_rot{deg}", f"{dt:.0f}", f"before={acc0:.4f};{row}")
+        metrics[f"table2_rot{deg}_us_per_step"] = dt
+        metrics[f"table2_rot{deg}_acc_before"] = acc0
+        metrics.update({f"table2_rot{deg}_acc_{k}": v[0]
+                        for k, v in res.items()})
+    return metrics
 
 
 def section_memory(_fast: bool):
     from . import paper_tables as pt
+    metrics = {}
     for b in (32, 256):
         t = pt.lenet_memory_table(b)
         full_bp = t["full_bp"]["fp32_bytes"]
@@ -95,17 +105,20 @@ def section_memory(_fast: bool):
         print(f"# Fig4/5 (LeNet B={b}): " + " ".join(
             f"{k}: fp32={v['fp32_bytes']/1e6:.2f}MB "
             f"int8={v['int8_bytes']/1e6:.2f}MB" for k, v in t.items()))
-        derived = (f"bp_over_zo={full_bp/fz:.2f};"
-                   f"cls1_overhead={(t['zo_feat_cls1']['fp32_bytes']-fz)/fz*100:.3f}%;"
-                   f"int8_saving={fz/t['full_zo']['int8_bytes']:.2f}x;"
-                   f"int8_saving_reused={fz/t['full_zo']['int8_reused_bytes']:.2f}x")
-        emit(f"memory_lenet_b{b}", "0", derived)
+        metrics[f"memory_lenet_b{b}_bp_over_zo"] = full_bp / fz
+        metrics[f"memory_lenet_b{b}_cls1_overhead_pct"] = \
+            (t["zo_feat_cls1"]["fp32_bytes"] - fz) / fz * 100
+        metrics[f"memory_lenet_b{b}_int8_saving"] = \
+            fz / t["full_zo"]["int8_bytes"]
+        metrics[f"memory_lenet_b{b}_int8_saving_reused"] = \
+            fz / t["full_zo"]["int8_reused_bytes"]
     p = pt.pointnet_memory_table(32)
     print(f"# Fig6 (PointNet B=32): full_bp={p['full_bp']['fp32_bytes']/1e6:.1f}MB "
           f"full_zo={p['full_zo']['fp32_bytes']/1e6:.1f}MB "
           f"cls1={p['zo_feat_cls1']['fp32_bytes']/1e6:.1f}MB")
-    emit("memory_pointnet_b32", "0",
-         f"bp_over_zo={p['full_bp']['fp32_bytes']/p['full_zo']['fp32_bytes']:.3f}")
+    metrics["memory_pointnet_b32_bp_over_zo"] = \
+        p["full_bp"]["fp32_bytes"] / p["full_zo"]["fp32_bytes"]
+    return metrics
 
 
 def section_steptime(fast: bool):
@@ -113,13 +126,14 @@ def section_steptime(fast: bool):
     bd = pt.steptime_breakdown(iters=5 if fast else 20)
     print("# Fig7 (step-time, this host): " +
           " ".join(f"{k}={v:.0f}us" for k, v in bd.items()))
+    metrics = dict(bd)
     fp32_total = bd["fp32_forward_us"] + bd["fp32_perturb_us"] \
         + bd["fp32_update_us"] + bd["fp32_bp_tail_us"]
-    emit("steptime_fp32_total", f"{fp32_total:.0f}",
-         f"fwd_share={bd['fp32_forward_us']/fp32_total:.2f}")
-    int8_total = bd["int8_forward_us"] + bd["int8_perturb_us"]
-    emit("steptime_int8_fwdperturb", f"{int8_total:.0f}",
-         f"note=CPU-host-XLA;paper_ratio_on_rpi=1.38-1.42x")
+    metrics["steptime_fp32_total_us"] = fp32_total
+    metrics["steptime_fp32_fwd_share"] = bd["fp32_forward_us"] / fp32_total
+    metrics["steptime_int8_fwdperturb_us"] = \
+        bd["int8_forward_us"] + bd["int8_perturb_us"]
+    return metrics
 
 
 def section_signagree(_fast: bool):
@@ -129,7 +143,9 @@ def section_signagree(_fast: bool):
     dt = (time.perf_counter() - t0) * 1e6 / max(total, 1)
     print(f"# §4.3 sign agreement: {rate*100:.1f}% over {total} trials "
           f"(paper: ~95%)")
-    emit("int_loss_sign_agreement", f"{dt:.0f}", f"rate={rate:.4f}")
+    return {"int_loss_sign_agreement": rate,
+            "int_loss_sign_trials": total,
+            "int_loss_sign_us_per_trial": dt}
 
 
 def section_roofline(_fast: bool):
@@ -138,14 +154,17 @@ def section_roofline(_fast: bool):
     ok = [r for r in rows if r.get("status") == "ok"]
     print("# Roofline (single-pod 16x16, per-device):")
     print("\n".join("# " + l for l in rl.format_table(rows).splitlines()))
+    metrics = {}
     for r in ok:
-        emit(f"roofline_{r['arch']}_{r['shape']}",
-             f"{max(r['t_compute_s'], r['t_memory_s'], r['t_collective_s'])*1e6:.0f}",
-             f"bottleneck={r['bottleneck']};frac={r['roofline_fraction']:.3f};"
-             f"useful={r['useful_flops_ratio']:.3f}")
+        key = f"roofline_{r['arch']}_{r['shape']}"
+        metrics[f"{key}_us"] = max(r["t_compute_s"], r["t_memory_s"],
+                                   r["t_collective_s"]) * 1e6
+        metrics[f"{key}_fraction"] = r["roofline_fraction"]
+        metrics[f"{key}_useful_flops_ratio"] = r["useful_flops_ratio"]
     out = Path(__file__).resolve().parent.parent / "results" / "roofline_single.json"
     out.parent.mkdir(exist_ok=True)
     out.write_text(json.dumps(rows, indent=1, default=str))
+    return metrics
 
 
 SECTIONS = {
@@ -162,17 +181,23 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--section", choices=sorted(SECTIONS), action="append")
+    ap.add_argument("--out", default="")
     args = ap.parse_args()
-    print("name,us_per_call,derived")
+    ran = []
+    metrics = {}
     for name, fn in SECTIONS.items():
         if args.section and name not in args.section:
             continue
         t0 = time.perf_counter()
         try:
-            fn(args.fast)
+            metrics.update(fn(args.fast))
+            ran.append(name)
         except Exception as e:  # noqa: BLE001
-            emit(f"{name}_ERROR", "0", f"{type(e).__name__}:{e}")
+            print(f"# [{name}] ERROR {type(e).__name__}: {e}")
+            metrics[f"{name}_error"] = f"{type(e).__name__}:{e}"
         print(f"# [{name}] done in {time.perf_counter()-t0:.1f}s")
+    write_bench("paper", {"fast": args.fast, "sections": ",".join(ran)},
+                metrics, out=args.out or None)
 
 
 if __name__ == '__main__':

@@ -161,6 +161,7 @@ class LaneConfig:
     # EXPERIMENTS.md §Perf). elastic_zo lane only.
     fused_probes: bool = False
     # int8 lane (Alg. 2)
+    int8_loss_mode: str = "int"       # int (INT8*, Eq. 7-12) | float (sgn of fp32 diff)
     int8_r_max: int = 3
     int8_p_zero: float = 0.33
     int8_b_zo: int = 1

@@ -43,8 +43,9 @@ class BuiltModel:
     decode_step: Callable
     # serve subsystem entry points (src/repro/serve/): sampled serving needs
     # raw logits, and the paged variants address the KV pool via page tables.
-    prefill_logits: Callable = None
-    decode_step_paged: Callable = None
+    # Optional: builds that predate the serve path may leave them unset.
+    prefill_logits: Optional[Callable] = None
+    decode_step_paged: Optional[Callable] = None
 
     # ---- host-side helpers -------------------------------------------- #
     def input_specs(self) -> Dict[str, jax.ShapeDtypeStruct]:

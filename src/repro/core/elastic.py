@@ -20,17 +20,21 @@ Multi-probe (n>1) antithetic SPSA with a runtime ``probe_mask`` implements
 straggler mitigation: a dropped probe is masked out and the update is
 renormalized by the surviving count — no recompile, no waiting
 (docs/design.md §8).
+
+This module is the fp32 *lane definition*: the partition and the
+``TrainState``. The step itself — probe schedule, coeff transform, the
+accumulate-then-cast ZO update, the tail SGD — is built by the
+lane-polymorphic update engine (core/engine.py, docs/design.md §10),
+which the fleet's ledger replay derives from as well.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
-import jax.numpy as jnp
 
 from ..configs.base import LaneConfig
-from . import zo
+from .engine import Fp32Engine
 
 ZO_GROUPS = ("embed", "pos_embed", "encoder", "periods_zo")
 BP_GROUPS = ("periods_bp", "final_norm", "unembed")
@@ -63,7 +67,7 @@ def make_elastic_step(loss_fn: Callable[[Any, Any], jax.Array],
                       lane: LaneConfig,
                       partition_fn: Optional[Callable] = None,
                       paired_loss_fn: Optional[Callable] = None):
-    """Build the ElasticZO train step.
+    """Build the ElasticZO train step (engine-built, fp32 numerics).
 
     loss_fn(params, batch) -> scalar fp32 (global mean under GSPMD).
     partition_fn(params) -> (zo_part, bp_part); defaults to the LM
@@ -71,113 +75,5 @@ def make_elastic_step(loss_fn: Callable[[Any, Any], jax.Array],
     (state, batch, probe_mask) -> (state, metrics).
     probe_mask: fp32[n_probes]; all-ones for a healthy fleet.
     """
-    n = lane.zo_num_probes
-    # `is None` test: an explicit tail LR of 0.0 means "freeze the tail"
-    base_eta_tail = lane.learning_rate if lane.tail_learning_rate is None \
-        else lane.tail_learning_rate
-
-    def _decay(step):
-        if lane.lr_decay_every <= 0 or lane.lr_decay_factor == 1.0:
-            return jnp.float32(1.0)
-        k = jnp.floor(step.astype(jnp.float32) / lane.lr_decay_every)
-        return jnp.power(jnp.float32(lane.lr_decay_factor), k)
-
-    def step(state: TrainState, batch, probe_mask: jax.Array):
-        decay = _decay(state.step)
-        eta_zo = lane.learning_rate * decay
-        eta_tail = base_eta_tail * decay
-        params = state.params
-        if partition_fn is not None:
-            zo_part, bp_part = partition_fn(params)
-        else:
-            zo_part, bp_part = partition(params, lane)
-        base = jax.random.wrap_key_data(state.seed)
-        key = jax.random.fold_in(base, state.step)
-
-        if lane.lane == "full_bp":
-            loss, grads = jax.value_and_grad(
-                lambda bp: loss_fn(bp, batch))(bp_part)
-            new_bp = jax.tree.map(
-                lambda p, g: (p.astype(jnp.float32)
-                              - eta_tail * g.astype(jnp.float32)).astype(p.dtype),
-                bp_part, grads)
-            new_params = new_bp
-            metrics = {"loss": loss, "zo_g": jnp.float32(0)}
-            return TrainState(new_params, state.step + 1, state.seed), metrics
-
-        def tail_loss(bp, zo_pert):
-            return loss_fn(merge(zo_pert, bp), batch)
-
-        has_tail = bool(bp_part) and lane.lane == "elastic_zo"
-        new_zo = zo_part
-        tail_grad = None
-        loss_acc = jnp.float32(0)
-        g_acc = jnp.float32(0)
-        valid = jnp.maximum(jnp.sum(probe_mask), 1.0)
-
-        zo_src = zo_part
-        for i in range(n):
-            pk = jax.random.fold_in(key, i)
-            if paired_loss_fn is not None and has_tail:
-                # fused antithetic pair: one layer traversal for both
-                # probes; grad of the mean IS the averaged tail gradient.
-                def f(bp, _zo=zo_src, _pk=pk):
-                    lp_, lm_ = paired_loss_fn(bp, _zo, batch, _pk)
-                    return 0.5 * (lp_ + lm_), (lp_, lm_)
-                (_, (lp, lm)), g_tail_i = jax.value_and_grad(
-                    f, has_aux=True)(bp_part)
-                g_tail_i = jax.tree.map(
-                    lambda x, m=probe_mask[i]: m * x.astype(jnp.float32),
-                    g_tail_i)
-                tail_grad = g_tail_i if tail_grad is None else jax.tree.map(
-                    jnp.add, tail_grad, g_tail_i)
-                g = zo.projected_gradient(lp, lm, lane.zo_eps, lane.zo_clip)
-                g = g * probe_mask[i]
-                new_zo = zo.zo_update(new_zo, pk, eta_zo * g / valid)
-                loss_acc = loss_acc + 0.5 * (lp + lm) * probe_mask[i]
-                g_acc = g_acc + jnp.abs(g)
-                continue
-            zp = zo.perturb(zo_src, pk, lane.zo_eps)
-            if has_tail:
-                lp, gp = jax.value_and_grad(tail_loss)(bp_part, zp)
-                # sequence the minus pass after the plus pass so their
-                # activation peaks don't overlap (MaxText-style barrier)
-                zo_src, lp = jax.lax.optimization_barrier((zo_src, lp))
-                zm = zo.perturb(zo_src, pk, -lane.zo_eps)
-                lm, gm = jax.value_and_grad(tail_loss)(bp_part, zm)
-                if lane.bp_grad_mode == "clean":
-                    _, gc = jax.value_and_grad(tail_loss)(bp_part, zo_part)
-                    g_tail_i = gc
-                else:
-                    g_tail_i = jax.tree.map(lambda a, b: (a + b) * 0.5, gp, gm)
-                g_tail_i = jax.tree.map(
-                    lambda x, m=probe_mask[i]: m * x.astype(jnp.float32),
-                    g_tail_i)
-                tail_grad = g_tail_i if tail_grad is None else jax.tree.map(
-                    jnp.add, tail_grad, g_tail_i)
-            else:
-                lp = loss_fn(merge(zp, bp_part), batch)
-                zo_src, lp = jax.lax.optimization_barrier((zo_src, lp))
-                zm = zo.perturb(zo_src, pk, -lane.zo_eps)
-                lm = loss_fn(merge(zm, bp_part), batch)
-            g = zo.projected_gradient(lp, lm, lane.zo_eps, lane.zo_clip)
-            g = g * probe_mask[i]
-            # fused ZO update for this probe: theta <- theta - (eta*g/valid) z
-            new_zo = zo.zo_update(new_zo, pk, eta_zo * g / valid)
-            loss_acc = loss_acc + 0.5 * (lp + lm) * probe_mask[i]
-            g_acc = g_acc + jnp.abs(g)
-
-        if has_tail:
-            tail_grad = jax.tree.map(lambda gt: gt / valid, tail_grad)
-            new_bp = jax.tree.map(
-                lambda p, gt: (p.astype(jnp.float32)
-                               - eta_tail * gt.astype(jnp.float32)).astype(p.dtype),
-                bp_part, tail_grad)
-        else:
-            new_bp = bp_part
-
-        new_params = merge(new_zo, new_bp)
-        metrics = {"loss": loss_acc / valid, "zo_g": g_acc / n}
-        return TrainState(new_params, state.step + 1, state.seed), metrics
-
-    return step
+    return Fp32Engine(lane, partition_fn,
+                      paired_loss_fn=paired_loss_fn).make_step(loss_fn)

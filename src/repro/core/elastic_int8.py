@@ -7,20 +7,24 @@ ZO-Feat-Cls1/2 put only the last 1-2 FC layers in the BP part).
 ``loss_mode``:
   "int"   — ternary g = sgn(L+ - L-) from integer logits (INT8*, Eq. 7-12)
   "float" — g = sgn of the fp32 loss difference (the paper's INT8 column)
+
+This module is the int8 *lane definition*; the step is built by the
+update engine's int8 numerics plugin (core/engine.py, docs/design.md
+§10): per-probe keys ``fold_in(fold_in(base, step), probe_id)`` (the
+fleet's global probe schedule), int32 accumulate-then-clamp ZO update,
+NITI tail combined as a saturating int8 sum — the identical arithmetic
+the fleet's int8 ledger replay applies.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, NamedTuple, Tuple
+from typing import Callable, List, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import LaneConfig
-from . import prng
-from .elastic import TrainState
-from .int8 import (QTensor, fc_backward_int8, output_error_int8,
-                   perturb_int8, zo_update_int8)
-from .int_loss import float_loss, int_loss_sign
+from .engine import Int8Engine
+from .int8 import QTensor
 
 
 def make_int8_elastic_step(forward: Callable, partition_fn: Callable,
@@ -29,54 +33,8 @@ def make_int8_elastic_step(forward: Callable, partition_fn: Callable,
                            p_zero: float | None = None):
     """tail_fcs: [(layer_name, act_key)] in forward order, e.g.
     [("fc2", "fc2_in"), ("fc3", "fc3_in")] — the BP part (C..L)."""
-    r_max = lane.int8_r_max
-    pz = lane.int8_p_zero if p_zero is None else p_zero
-
-    def step(state: TrainState, batch, probe_mask):
-        params = state.params
-        zo_part, bp_part = partition_fn(params)
-        base = jax.random.wrap_key_data(state.seed)
-        seed = prng.seed_from_key(jax.random.fold_in(base, state.step))
-        pzero = jnp.float32(pz)
-
-        # functional +/- perturbation (the paper's in-place +1/-2/+1 replay
-        # sequence, minus the double-clamp asymmetry; docs/design.md §9)
-        zo_p = perturb_int8(zo_part, seed, +1, r_max, pzero)
-        logits_p, acts_p = forward({**zo_p, **bp_part}, batch["x"])
-        zo_m = perturb_int8(zo_part, seed, -1, r_max, pzero)
-        logits_m, _ = forward({**zo_m, **bp_part}, batch["x"])
-
-        if loss_mode == "int":
-            g = int_loss_sign(logits_p, logits_m, batch["y"])
-        else:
-            lf_p = float_loss(logits_p, batch["y"])
-            lf_m = float_loss(logits_m, batch["y"])
-            g = jnp.sign(lf_p - lf_m).astype(jnp.int32)
-
-        new_zo = zo_update_int8(zo_part, seed, g, r_max, pzero, lane.int8_b_zo)
-
-        # --- BP tail (NITI backward over the last FC layers) ----------- #
-        new_bp = dict(bp_part)
-        if tail_fcs:
-            e = output_error_int8(logits_p, batch["y"])
-            for name, act_key in reversed(tail_fcs):
-                w = bp_part[name]["w"]
-                a_in: QTensor = acts_p[act_key]
-                new_w, e = fc_backward_int8(w, a_in, e, lane.int8_b_bp)
-                new_bp[name] = {"w": new_w}
-                # relu mask for the propagated error (pre-activation of the
-                # previous layer is >0 exactly where its output is >0)
-                e = e * (a_in.data.astype(jnp.int32) > 0)
-
-        metrics = {
-            "loss": float_loss(logits_p, batch["y"]),
-            "g": g.astype(jnp.float32),
-            "acc": jnp.mean((jnp.argmax(logits_p.data, -1) ==
-                             batch["y"]).astype(jnp.float32)),
-        }
-        return TrainState({**new_zo, **new_bp}, state.step + 1, state.seed), metrics
-
-    return step
+    return Int8Engine(lane, partition_fn, tail_fcs=tail_fcs,
+                      loss_mode=loss_mode, p_zero=p_zero).make_step(forward)
 
 
 def int8_eval(forward: Callable, params, x: QTensor, y) -> jax.Array:

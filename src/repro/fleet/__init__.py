@@ -20,11 +20,11 @@ from .replay import (ReplaySchema, apply_step, ledger_step_arrays,
                      step_arrays, step_coeffs)
 from .simulation import FleetResult, run_fleet
 from .transport import ChaosTransport
-from .worker import Worker, make_probe_fn
+from .worker import Worker, make_int8_probe_fn, make_probe_fn
 
 __all__ = ["FleetConfig", "Ledger", "Record", "Commit", "ChaosTransport",
            "Worker", "Coordinator", "run_fleet", "FleetResult",
-           "make_probe_fn", "make_reference_step", "reference_state",
-           "ReplaySchema", "make_schema", "apply_step", "replay",
-           "make_replay_fn", "ledger_step_arrays", "step_arrays",
+           "make_probe_fn", "make_int8_probe_fn", "make_reference_step",
+           "reference_state", "ReplaySchema", "make_schema", "apply_step",
+           "replay", "make_replay_fn", "ledger_step_arrays", "step_arrays",
            "step_coeffs", "probe_seeds"]

@@ -1,16 +1,32 @@
 """The append-only seed ledger: records, commits, binary wire format.
 
-One training step of one worker is a ``Record``:
+One training step of one worker is a ``Record``. Record v2 carries a
+**numerics tag** — the record's wire tag byte selects the lane — with
+one probe-entry layout per numerics:
 
+  fp32 ('R'):
     R | step u32 | worker u8 | m u8 | loss f32
-      | m x (probe seed u64, loss-diff f32)           <- the ZO part
+      | m x (probe seed u64, loss-diff f32)        <- 12 B/probe (ZO)
       | n_leaves u16 | n x (flat size u32, scale f32) | int8 payload
 
+  int8 ('I', ElasticZO-INT8 / Alg. 2):
+    I | step u32 | worker u8 | m u8 | loss f32
+      | m x (probe seed u64, ternary g i8)         <- 9 B/probe (ZO)
+      | n_leaves u16 | n x (flat size u32) | int8 payload
+
 The ZO part is the paper's punchline made literal: 12 bytes per probe
-(8-byte seed + 4-byte scalar) carries the *entire* ZO gradient of an
-arbitrarily large model half. The int8 payload is the worker's BP-tail
-gradient (sum over its probes), per-tensor scaled (train/compress.py
-wire format, ~1 byte/element of the small tail).
+(8-byte seed + 4-byte scalar) — or **9 bytes** in the int8 lane, where
+the projected gradient is the ternary sign — carries the *entire* ZO
+gradient of an arbitrarily large model half. ``deltas`` holds the
+per-probe scalar in the lane's own dtype: fp32 loss-diffs, or int8
+ternary signs.
+
+The tail payload is the worker's BP-tail contribution: fp32 lane — the
+probe-summed tail gradient, per-tensor-scaled int8 with error feedback
+(train/compress.py); int8 lane — the saturating int8 sum of the NITI
+per-probe weight updates (already int8-native, no scale on the wire;
+the weight exponents never move, so dequantization state is static
+schema).
 
 The coordinator closes a step with a ``Commit``:
 
@@ -33,9 +49,11 @@ import numpy as np
 
 _REC_HDR = struct.Struct("<BIBBf")        # tag, step, worker, m, loss
 _PROBE = struct.Struct("<Qf")             # seed u64, loss-diff f32
+_PROBE8 = struct.Struct("<Qb")            # seed u64, ternary g i8
 _LEAF_HDR = struct.Struct("<If")          # flat size u32, scale f32
+_LEAF_HDR8 = struct.Struct("<I")          # flat size u32 (int8: no scale)
 _COMMIT = struct.Struct("<BII")           # tag, step, accepted bitmask
-_TAG_R, _TAG_C = 0x52, 0x43               # 'R', 'C'
+_TAG_R, _TAG_C, _TAG_I = 0x52, 0x43, 0x49  # 'R' fp32, 'C' commit, 'I' int8
 
 
 @dataclass
@@ -43,33 +61,48 @@ class Record:
     step: int
     worker: int
     seeds: np.ndarray                     # uint64 [m]
-    deltas: np.ndarray                    # float32 [m]   (l_plus - l_minus)
-    loss: float                           # mean 0.5*(l+ + l-) over probes
+    deltas: np.ndarray                    # fp32 loss-diffs | int8 signs
+    loss: float                           # mean fp32 loss over probes
     tail_q: List[np.ndarray] = field(default_factory=list)   # int8, flat
     tail_scales: np.ndarray = field(
         default_factory=lambda: np.zeros((0,), np.float32))
+    numerics: str = "fp32"                # record-v2 numerics tag
+
+    @property
+    def zo_probe_nbytes(self) -> int:
+        """Wire bytes of ONE probe entry (the paper's headline number)."""
+        return _PROBE8.size if self.numerics == "int8" else _PROBE.size
 
     @property
     def zo_nbytes(self) -> int:
-        """Wire bytes of the ZO part (header + seed/scalar pairs)."""
-        return _REC_HDR.size + _PROBE.size * len(self.seeds)
+        """Wire bytes of the ZO part (header + probe entries)."""
+        return _REC_HDR.size + self.zo_probe_nbytes * len(self.seeds)
 
     @property
     def tail_nbytes(self) -> int:
-        return 2 + sum(_LEAF_HDR.size + q.size for q in self.tail_q)
+        leaf_hdr = _LEAF_HDR8 if self.numerics == "int8" else _LEAF_HDR
+        return 2 + sum(leaf_hdr.size + q.size for q in self.tail_q)
 
     @property
     def nbytes(self) -> int:
         return self.zo_nbytes + self.tail_nbytes
 
     def to_bytes(self) -> bytes:
-        out = [_REC_HDR.pack(_TAG_R, self.step, self.worker,
+        tag = _TAG_I if self.numerics == "int8" else _TAG_R
+        out = [_REC_HDR.pack(tag, self.step, self.worker,
                              len(self.seeds), float(self.loss))]
-        for s, d in zip(self.seeds, self.deltas):
-            out.append(_PROBE.pack(int(s), float(d)))
-        out.append(struct.pack("<H", len(self.tail_q)))
-        for q, sc in zip(self.tail_q, self.tail_scales):
-            out.append(_LEAF_HDR.pack(q.size, float(sc)))
+        if self.numerics == "int8":
+            for s, g in zip(self.seeds, self.deltas):
+                out.append(_PROBE8.pack(int(s), int(g)))
+            out.append(struct.pack("<H", len(self.tail_q)))
+            for q in self.tail_q:
+                out.append(_LEAF_HDR8.pack(q.size))
+        else:
+            for s, d in zip(self.seeds, self.deltas):
+                out.append(_PROBE.pack(int(s), float(d)))
+            out.append(struct.pack("<H", len(self.tail_q)))
+            for q, sc in zip(self.tail_q, self.tail_scales):
+                out.append(_LEAF_HDR.pack(q.size, float(sc)))
         for q in self.tail_q:
             out.append(np.ascontiguousarray(q, np.int8).tobytes())
         return b"".join(out)
@@ -89,6 +122,49 @@ class Commit:
 
     def to_bytes(self) -> bytes:
         return _COMMIT.pack(_TAG_C, self.step, self.accepted)
+
+
+def _parse_record(buf: bytes, off: int, numerics: str):
+    _, step, worker, m, loss = _REC_HDR.unpack_from(buf, off)
+    off += _REC_HDR.size
+    seeds = np.zeros((m,), np.uint64)
+    if numerics == "int8":
+        deltas = np.zeros((m,), np.int8)
+        for i in range(m):
+            s, g = _PROBE8.unpack_from(buf, off)
+            off += _PROBE8.size
+            seeds[i], deltas[i] = s, np.int8(g)
+    else:
+        deltas = np.zeros((m,), np.float32)
+        for i in range(m):
+            s, d = _PROBE.unpack_from(buf, off)
+            off += _PROBE.size
+            seeds[i], deltas[i] = s, np.float32(d)
+    (n_leaves,) = struct.unpack_from("<H", buf, off)
+    off += 2
+    sizes: List[int] = []
+    if numerics == "int8":
+        scales = np.zeros((0,), np.float32)
+        for _ in range(n_leaves):
+            (sz,) = _LEAF_HDR8.unpack_from(buf, off)
+            off += _LEAF_HDR8.size
+            sizes.append(sz)
+    else:
+        scales = np.zeros((n_leaves,), np.float32)
+        for i in range(n_leaves):
+            sz, sc = _LEAF_HDR.unpack_from(buf, off)
+            off += _LEAF_HDR.size
+            sizes.append(sz)
+            scales[i] = np.float32(sc)
+    tail_q = []
+    for sz in sizes:
+        if off + sz > len(buf):
+            raise ValueError(f"truncated ledger payload at offset {off}")
+        tail_q.append(np.frombuffer(buf, np.int8, count=sz, offset=off).copy())
+        off += sz
+    rec = Record(step, worker, seeds, deltas, float(np.float32(loss)),
+                 tail_q, scales, numerics=numerics)
+    return rec, off
 
 
 class Ledger:
@@ -146,37 +222,23 @@ class Ledger:
     def from_bytes(cls, buf: bytes) -> "Ledger":
         led = cls()
         off = 0
-        while off < len(buf):
-            tag = buf[off]
-            if tag == _TAG_C:
-                _, step, mask = _COMMIT.unpack_from(buf, off)
-                off += _COMMIT.size
-                led.append_commit(Commit(step, mask))
-            elif tag == _TAG_R:
-                _, step, worker, m, loss = _REC_HDR.unpack_from(buf, off)
-                off += _REC_HDR.size
-                seeds = np.zeros((m,), np.uint64)
-                deltas = np.zeros((m,), np.float32)
-                for i in range(m):
-                    s, d = _PROBE.unpack_from(buf, off)
-                    off += _PROBE.size
-                    seeds[i], deltas[i] = s, np.float32(d)
-                (n_leaves,) = struct.unpack_from("<H", buf, off)
-                off += 2
-                sizes, scales = [], np.zeros((n_leaves,), np.float32)
-                for i in range(n_leaves):
-                    sz, sc = _LEAF_HDR.unpack_from(buf, off)
-                    off += _LEAF_HDR.size
-                    sizes.append(sz)
-                    scales[i] = np.float32(sc)
-                tail_q = []
-                for sz in sizes:
-                    tail_q.append(np.frombuffer(
-                        buf, np.int8, count=sz, offset=off).copy())
-                    off += sz
-                led.append_record(Record(step, worker, seeds, deltas,
-                                         float(np.float32(loss)),
-                                         tail_q, scales))
-            else:
-                raise ValueError(f"bad ledger tag {tag:#x} at offset {off}")
+        try:
+            while off < len(buf):
+                tag = buf[off]
+                if tag == _TAG_C:
+                    _, step, mask = _COMMIT.unpack_from(buf, off)
+                    off += _COMMIT.size
+                    led.append_commit(Commit(step, mask))
+                elif tag == _TAG_R:
+                    rec, off = _parse_record(buf, off, "fp32")
+                    led.append_record(rec)
+                elif tag == _TAG_I:
+                    rec, off = _parse_record(buf, off, "int8")
+                    led.append_record(rec)
+                else:
+                    raise ValueError(
+                        f"bad ledger tag {tag:#x} at offset {off}")
+        except struct.error as e:
+            raise ValueError(f"truncated ledger buffer at offset {off}: {e}") \
+                from e
         return led

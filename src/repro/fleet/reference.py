@@ -1,21 +1,23 @@
 """Single-process reference of the fleet semantics, for train_loop.run.
 
 The acceptance bar for repro.fleet is not "close": an 8-worker chaos run
-must reproduce a single-process run bit-exactly. This module is that
-single process: one step function that computes every worker's probe
-block, quantizes every worker's tail with its own error-feedback
-residual, and applies the identical replay-module update — sharing the
-very same jitted callables (worker.make_probe_fn / make_quantize_fn) the
-fleet workers use, so there is no cross-program rounding to hand-wave
-about.
+must reproduce a single-process run bit-exactly — in both lanes. This
+module is that single process: one step function that computes every
+worker's probe block (fp32: quantizing every worker's tail with its own
+error-feedback residual; int8: exact NITI payloads, no residual) and
+applies the identical engine-routed replay update — sharing the very
+same jitted callables (worker.make_probe_fn / make_int8_probe_fn /
+make_quantize_fn) the fleet workers use, so there is no cross-program
+rounding to hand-wave about.
 
 It is a host-side composite (run it with LoopConfig(jit=False)): jitting
-the whole step would re-fuse the shared sub-programs and shift the
+the whole step would re-fuse the shared sub-programs and shift the fp32
 stream by FMA-contraction ulps (see kernels/ref.zo_fused_replay_ref).
 
-Worker-local state (the EF residuals) rides inside ``state.params`` as
-``{"model": ..., "residual": [one tail tree per worker]}`` so restart
-semantics stay a pure function of the checkpointed state.
+Worker-local state (the fp32 EF residuals) rides inside ``state.params``
+as ``{"model": ..., "residual": [one tail tree per worker]}`` so restart
+semantics stay a pure function of the checkpointed state. The int8 lane
+has no residual (its payloads are exact); the slot holds Nones.
 """
 from __future__ import annotations
 
@@ -49,14 +51,17 @@ def make_reference_step(loss_fn: Callable, schema: ReplaySchema,
     probe_mask fp32[n_probes] is block-constant per worker (the commit
     bitmask expanded); pass the realized masks of a fleet run via
     LoopConfig.mask_fn to reproduce it, or a drop-rate stream to simulate
-    one.
+    one. For the int8 lane pass the shared ``probe_fn`` built by
+    worker.make_int8_probe_fn (there is no loss_fn-derived default).
     """
     lane: LaneConfig = schema.lane
     fleet = schema.fleet
     W, m = fleet.num_workers, fleet.probes_per_worker
     if probe_fn is None:
+        assert schema.numerics == "fp32", \
+            "int8 reference needs the shared make_int8_probe_fn callable"
         probe_fn = make_probe_fn(loss_fn, lane, schema.partition_fn)
-    if quantize_fn is None:
+    if quantize_fn is None and schema.numerics == "fp32":
         quantize_fn = make_quantize_fn()
 
     def step(state: TrainState, batch, probe_mask):
@@ -84,7 +89,10 @@ def make_reference_step(loss_fn: Callable, schema: ReplaySchema,
         valid = max(float(cmask.sum()), 1.0)
         loss = sum(records[w].loss * m
                    for w in commit.workers(W)) / valid
-        g = np.abs(deltas) / np.float32(2.0 * lane.zo_eps)
+        if schema.numerics == "int8":
+            g = np.abs(np.asarray(deltas, np.float32))
+        else:
+            g = np.abs(deltas) / np.float32(2.0 * lane.zo_eps)
         metrics = {"loss": jnp.float32(loss),
                    "zo_g": jnp.float32(float(np.sum(g)) / (W * m))}
         return TrainState({"model": new_model, "residual": new_residuals},

@@ -3,17 +3,23 @@
 Everything that holds model parameters — the coordinator, every worker, a
 late joiner catching up, the delta-checkpoint restore path, and the
 single-process reference (fleet/reference.py) — applies ledger steps
-through the functions in this module, and *only* through them. That is
-the entire bit-exactness story: one implementation of the update, one
-accumulation order, one per-step cast.
+through the functions in this module. The *arithmetic* is not defined
+here: this module decodes wire bytes and routes them through the
+lane-polymorphic update engine (core/engine.py, docs/design.md §10) —
+the same engine object whose ``make_step`` builds the live train step —
+so the fleet and the single-process lanes share literally one
+accumulation order and one per-step cast/clamp.
 
 Per committed step, with n = fleet probes, mask in {0,1}^n from the
 commit bitmask:
 
-  ZO half    theta <- cast(theta_f32 - sum_i coeff_i * z(seed_i))
-             coeff_i = -eta(step) * clip(delta_i / 2eps) * mask_i / valid
-  BP tail    p <- cast(p_f32 - eta_tail(step) * sum_w dequant(payload_w)
-                                                 / valid)
+  fp32  ZO    theta <- cast(theta_f32 - sum_i coeff_i * z(seed_i))
+              coeff_i = eta(step) * clip(delta_i / 2eps) * mask_i / valid
+        tail  p <- cast(p_f32 - eta_tail(step) * sum_w dequant(payload_w)
+                                                  / valid)
+  int8  ZO    theta <- clamp(theta - sum_i psr(g_i * z(seed_i), shift))
+              (g_i = masked ternary sign; masked probes are exact no-ops)
+        tail  w <- clamp(w - sum_w payload_w)   (int32-exact sum)
 
 valid = max(sum mask, 1). A K-step catch-up replays the ZO half in a
 single fused kernel pass (kernels/zo_fused_replay.py; off-TPU the eager
@@ -21,7 +27,8 @@ ref keeps the stream bitwise) and the tail sequentially — the two halves
 touch disjoint leaves, so fusing one and not the other is still exact.
 
 Scalar hyperparameter math (eta decay, clipping, masking) runs host-side
-in strict numpy float32 so every participant derives identical coeffs.
+in strict numpy float32 (core/engine.py ``host_coeffs``) so every
+participant derives identical coeffs.
 """
 from __future__ import annotations
 
@@ -35,8 +42,9 @@ import jax.numpy as jnp
 
 from ..configs.base import LaneConfig
 from ..configs.fleet import FleetConfig
-from ..core import elastic, prng, zo
-from ..kernels import ops
+from ..core import elastic, prng
+from ..core.engine import UpdateEngine, engine_for
+from ..core.int8 import QTensor
 from .ledger import Commit, Ledger, Record
 
 
@@ -45,10 +53,10 @@ class ReplaySchema:
     """Out-of-band protocol state shared at enrollment.
 
     Everything a participant needs to turn ledger bytes into a parameter
-    update: the lane hyperparameters, the fleet topology, the base PRNG
-    key (probe seeds are re-derivable, records carrying them is a wire
-    convenience), the ZO/BP partition, and the tail leaf layout that int8
-    payloads are flattened against.
+    update: the lane hyperparameters (bound into the engine), the fleet
+    topology, the base PRNG key (probe seeds are re-derivable, records
+    carrying them is a wire convenience), the ZO/BP partition, and the
+    tail leaf layout that int8 payloads are flattened against.
     """
     lane: LaneConfig
     fleet: FleetConfig
@@ -57,6 +65,9 @@ class ReplaySchema:
     tail_shapes: List[Tuple[int, ...]] = field(default_factory=list)
     tail_dtypes: List[Any] = field(default_factory=list)
     tail_treedef: Any = None
+    # always set by make_schema (the only constructor); Optional so a
+    # partially-built schema fails a type check, not an attribute deref
+    engine: Optional[UpdateEngine] = None
     # per-step seed memo: W workers + the coordinator + the reference all
     # derive the same array each step; compute it once (bounded cache)
     _seed_cache: Dict[int, np.ndarray] = field(default_factory=dict,
@@ -66,26 +77,41 @@ class ReplaySchema:
     def n_probes(self) -> int:
         return self.fleet.n_probes
 
+    @property
+    def numerics(self) -> str:
+        return self.engine.numerics
+
+
+def _is_q(x) -> bool:
+    return isinstance(x, QTensor)
+
 
 def make_schema(params, lane: LaneConfig, fleet_cfg: FleetConfig,
                 base_seed, partition_fn=None) -> ReplaySchema:
-    if partition_fn is None:
-        partition_fn = lambda p: elastic.partition(p, lane)  # noqa: E731
-    _, bp_part = partition_fn(params)
-    flat, treedef = jax.tree_util.tree_flatten(bp_part)
+    engine = engine_for(lane, partition_fn)
+    _, bp_part = engine.partition(params)
+    if engine.numerics == "int8":
+        # int8 tails are QTensor weights; the wire payload is the flat
+        # int8 update against each leaf's .data (exponents are static)
+        flat, treedef = jax.tree_util.tree_flatten(bp_part, is_leaf=_is_q)
+        shapes = [tuple(q.data.shape) for q in flat]
+        dtypes = [jnp.int8 for _ in flat]
+    else:
+        flat, treedef = jax.tree_util.tree_flatten(bp_part)
+        shapes = [tuple(x.shape) for x in flat]
+        dtypes = [x.dtype for x in flat]
     return ReplaySchema(
         lane=lane, fleet=fleet_cfg,
         base_seed=np.asarray(base_seed, np.uint32),
-        partition_fn=partition_fn,
-        tail_shapes=[tuple(x.shape) for x in flat],
-        tail_dtypes=[x.dtype for x in flat],
-        tail_treedef=treedef)
+        partition_fn=engine.partition,
+        tail_shapes=shapes, tail_dtypes=dtypes, tail_treedef=treedef,
+        engine=engine)
 
 
 def probe_seeds(schema: ReplaySchema, step: int) -> np.ndarray:
     """uint64[n]: the hash seeds of this step's probe keys.
 
-    Identical to what the worker's probe loop feeds core/prng.py —
+    Identical to what the engine's probe loop feeds core/prng.py —
     fold_in(fold_in(base, step), i), collapsed by prng.seed_from_key.
     """
     cached = schema._seed_cache.get(step)
@@ -102,40 +128,28 @@ def probe_seeds(schema: ReplaySchema, step: int) -> np.ndarray:
     return seeds
 
 
-def _decay32(lane: LaneConfig, step: int) -> np.float32:
-    if lane.lr_decay_every <= 0 or lane.lr_decay_factor == 1.0:
-        return np.float32(1.0)
-    k = np.float32(np.floor(np.float32(step) / np.float32(lane.lr_decay_every)))
-    return np.power(np.float32(lane.lr_decay_factor), k)
-
-
 def step_coeffs(schema: ReplaySchema, step: int, deltas: np.ndarray,
                 mask: np.ndarray) -> Tuple[np.ndarray, np.float32]:
-    """(coeffs fp32[n], valid) — the ZO scalar pipeline, strict fp32."""
-    lane = schema.lane
-    deltas = np.asarray(deltas, np.float32)
-    mask = np.asarray(mask, np.float32)
-    g = deltas / np.float32(2.0 * lane.zo_eps)
-    if lane.zo_clip is not None and lane.zo_clip > 0:
-        g = np.clip(g, np.float32(-lane.zo_clip), np.float32(lane.zo_clip))
-    g = g * mask
-    valid = np.float32(max(float(mask.sum()), 1.0))
-    eta = np.float32(lane.learning_rate) * _decay32(lane, step)
-    return -(eta * g) / valid, valid
+    """(coeffs[n], valid) — the lane's scalar coeff transform, host
+    domain (strict fp32 for the fp32 lane, ternary ints for int8)."""
+    return schema.engine.host_coeffs(step, deltas, mask)
 
 
 def step_arrays(commit: Commit, records: Dict[int, Record],
                 schema: ReplaySchema):
-    """(seeds u64[n], deltas f32[n], mask f32[n], records) for one commit.
+    """(seeds u64[n], deltas [n], mask f32[n], records) for one commit.
 
-    Masked probes carry seed 0 / delta 0 — their coefficient is exactly
-    zero, so the seed value never reaches the parameters. `records` may
-    contain non-accepted entries (the reference computes all of them);
-    only committed workers' blocks are read.
+    ``deltas`` is the per-probe wire scalar in the lane dtype (fp32
+    loss-diffs, int8 ternary signs). Masked probes carry seed 0 /
+    delta 0 — their coefficient is exactly zero, so the seed value never
+    reaches the parameters. ``records`` may contain non-accepted entries
+    (the reference computes all of them); only committed workers' blocks
+    are read.
     """
     n, m = schema.n_probes, schema.fleet.probes_per_worker
     seeds = np.zeros((n,), np.uint64)
-    deltas = np.zeros((n,), np.float32)
+    deltas = np.zeros(
+        (n,), np.int8 if schema.numerics == "int8" else np.float32)
     mask = np.zeros((n,), np.float32)
     for w in commit.workers(schema.fleet.num_workers):
         rec = records[w]
@@ -151,44 +165,31 @@ def ledger_step_arrays(ledger: Ledger, step: int, schema: ReplaySchema):
     return step_arrays(commit, records, schema)
 
 
-def _apply_zo(zo_part, seeds: np.ndarray, coeffs: np.ndarray):
-    """seeds u64 [S, n], coeffs f32 [S, n] over every ZO leaf."""
-    def f(path, leaf):
-        return ops.zo_fused_replay(leaf, seeds.astype(np.uint32), coeffs,
-                                   zo.path_salt(path))
-    return jax.tree_util.tree_map_with_path(f, zo_part)
+def _tail_tree(rec: Record, schema: ReplaySchema):
+    """Decode one record's tail payload into a bp-shaped tree.
 
-
-def _dequant_sum(records: Dict[int, Record], accepted: List[int],
-                 schema: ReplaySchema):
-    """sum_w q_w * scale_w over accepted workers, in worker-id order."""
-    acc = None
-    for w in accepted:
-        rec = records[w]
-        leaves = []
+    fp32: dequantized fp32 grads (q * scale); int8: int32 updates. The
+    combine/apply arithmetic lives in the engine, not here.
+    """
+    leaves = []
+    if schema.numerics == "int8":
+        for q, shape in zip(rec.tail_q, schema.tail_shapes):
+            leaves.append(jnp.asarray(q, jnp.int8).astype(jnp.int32)
+                          .reshape(shape))
+    else:
         for q, sc, shape in zip(rec.tail_q, rec.tail_scales,
                                 schema.tail_shapes):
             leaves.append(jnp.asarray(q, jnp.int8).astype(jnp.float32)
                           .reshape(shape) * jnp.float32(sc))
-        part = jax.tree_util.tree_unflatten(schema.tail_treedef, leaves)
-        acc = part if acc is None else jax.tree.map(jnp.add, acc, part)
-    return acc
+    return jax.tree_util.tree_unflatten(schema.tail_treedef, leaves)
 
 
 def _apply_tail(bp_part, step: int, records, accepted: List[int],
                 valid: np.float32, schema: ReplaySchema):
     if not jax.tree_util.tree_leaves(bp_part) or not accepted:
         return bp_part
-    lane = schema.lane
-    avg = _dequant_sum(records, accepted, schema)
-    avg = jax.tree.map(lambda a: a / jnp.float32(valid), avg)
-    base_eta = lane.learning_rate if lane.tail_learning_rate is None \
-        else lane.tail_learning_rate
-    eta = np.float32(base_eta) * _decay32(lane, step)
-    return jax.tree.map(
-        lambda p, a: (p.astype(jnp.float32)
-                      - jnp.float32(eta) * a).astype(p.dtype),
-        bp_part, avg)
+    trees = [_tail_tree(records[w], schema) for w in accepted]
+    return schema.engine.apply_tail_records(bp_part, step, trees, valid)
 
 
 def apply_step(params, step: int, seeds: np.ndarray, deltas: np.ndarray,
@@ -197,7 +198,8 @@ def apply_step(params, step: int, seeds: np.ndarray, deltas: np.ndarray,
     """One committed step: the canonical params(t) -> params(t+1)."""
     zo_part, bp_part = schema.partition_fn(params)
     coeffs, valid = step_coeffs(schema, step, deltas, mask)
-    new_zo = _apply_zo(zo_part, seeds[None, :], coeffs[None, :])
+    new_zo = schema.engine.apply_zo_records(zo_part, seeds[None, :],
+                                            coeffs[None, :])
     m = schema.fleet.probes_per_worker
     accepted = sorted(w for w in records if mask[w * m] > 0)
     new_bp = _apply_tail(bp_part, step, records, accepted, valid, schema)
@@ -224,7 +226,7 @@ def replay(params, ledger: Ledger, schema: ReplaySchema,
     seeds = np.stack([s for s, _, _, _ in per_step])          # [S, n]
     all_coeffs = np.stack([c for c, _ in scalar])             # [S, n]
     zo_part, bp_part = schema.partition_fn(params)
-    new_zo = _apply_zo(zo_part, seeds, all_coeffs)
+    new_zo = schema.engine.apply_zo_records(zo_part, seeds, all_coeffs)
     m = schema.fleet.probes_per_worker
     for i, (_, _, mk, records) in enumerate(per_step):
         accepted = sorted(w for w in records if mk[w * m] > 0)

@@ -53,16 +53,23 @@ def run_fleet(loss_fn: Callable, params, lane: LaneConfig,
               fleet_cfg: FleetConfig, batch_fn: Callable[[int], Any],
               steps: int, base_seed, partition_fn=None,
               trace: bool = False, worker_ckpt_dirs: Optional[List] = None,
-              log_every: int = 0) -> FleetResult:
+              log_every: int = 0, probe_fn=None) -> FleetResult:
     """Train `steps` rounds on a simulated fleet; return the full state.
 
     batch_fn(step) must be a pure function of the step index (the repo's
     data contract, docs/design.md §9) — it is what lets every worker see
     the same batch without a data channel.
+
+    For the int8 lane (lane.lane == "elastic_zo_int8") pass ``probe_fn``
+    built by worker.make_int8_probe_fn (it binds the integer forward and
+    the tail-FC layout); ``loss_fn`` is then unused and may be None.
     """
     schema = make_schema(params, lane, fleet_cfg, base_seed, partition_fn)
-    probe_fn = make_probe_fn(loss_fn, lane, schema.partition_fn)
-    quantize_fn = make_quantize_fn()
+    if probe_fn is None:
+        assert schema.numerics == "fp32", \
+            "int8 fleets need a make_int8_probe_fn-built probe_fn"
+        probe_fn = make_probe_fn(loss_fn, lane, schema.partition_fn)
+    quantize_fn = make_quantize_fn() if schema.numerics == "fp32" else None
     transport = ChaosTransport(fleet_cfg)
     coordinator = Coordinator(params, schema)
     dirs = worker_ckpt_dirs or [None] * fleet_cfg.num_workers

@@ -4,27 +4,30 @@ A worker's step has two halves with very different costs:
 
   * compute (jitted, shared): evaluate its probe block's antithetic loss
     pairs on the step-deterministic batch and the BP-tail gradient at the
-    perturbed points (Alg. 1's avg_perturbed mode, the same math as
-    core/elastic.py's inner loop);
-  * protocol (host-side, canonical): quantize the tail with error
-    feedback, publish the Record, and on commit receipt apply the step
-    through fleet/replay.py.
+    perturbed points — fp32 lane: Alg. 1's avg_perturbed mode; int8
+    lane: Alg. 2's integer forward pair + NITI tail, both the same math
+    the update engine's train step runs (core/engine.py);
+  * protocol (host-side, canonical): publish the Record (fp32: quantize
+    the tail with error feedback; int8: the tail update is already
+    int8-native), and on commit receipt apply the step through
+    fleet/replay.py.
 
-``make_probe_fn`` / ``make_quantize_fn`` build ONE jitted callable each
-that every worker *and* the single-process reference share — same
-executable, same inputs, same bits. That, plus the replay-module apply,
-is why W simulated devices and one process produce identical parameter
-streams.
+``make_probe_fn`` / ``make_int8_probe_fn`` / ``make_quantize_fn`` build
+ONE jitted callable each that every worker *and* the single-process
+reference share — same executable, same inputs, same bits. That, plus
+the engine-routed replay apply, is why W simulated devices and one
+process produce identical parameter streams.
 
-Error-feedback residuals are crash-consistent by protocol: a worker
-whose record is not in the commit (dropped, straggled, or crashed)
-resets its residual, so a restarted worker with a zero residual is
+Error-feedback residuals (fp32 lane only — the int8 tail payload is
+exact by construction) are crash-consistent by protocol: a worker whose
+record is not in the commit (dropped, straggled, or crashed) resets its
+residual, so a restarted worker with a zero residual is
 indistinguishable from an unlucky one — ledger replay needs no residual
 state (docs/fleet.md).
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
@@ -32,7 +35,8 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import LaneConfig
-from ..core import elastic, zo
+from ..core import elastic, prng, zo
+from ..core.engine import Int8Engine
 from ..train import checkpoint as ckpt
 from ..train.compress import compress_tree
 from .ledger import Commit, Record
@@ -93,12 +97,55 @@ def make_probe_fn(loss_fn: Callable, lane: LaneConfig, partition_fn=None):
     return jax.jit(probe_eval)
 
 
+def make_int8_probe_fn(forward: Callable, lane: LaneConfig, partition_fn,
+                       tail_fcs: List[Tuple[str, str]],
+                       loss_mode: Optional[str] = None):
+    """Jitted (params, batch, step, probe_ids, base_seed) ->
+    (gs int32[m], tail payload int8 tree, loss f32[m]) — the int8-lane
+    twin of ``make_probe_fn``, built on the same engine phases as the
+    single-process Alg. 2 step.
+
+    The tail payload is the saturating int8 combine of the worker's
+    per-probe NITI updates — exactly the record-v2 wire value, so
+    quantization on this lane is lossless (no error feedback needed).
+    """
+    engine = Int8Engine(lane, partition_fn, tail_fcs=tail_fcs,
+                        loss_mode=loss_mode)
+    from ..core.int_loss import float_loss
+
+    def probe_eval(params, batch, step, probe_ids, base_seed):
+        zo_part, bp_part = engine.partition(params)
+        base = jax.random.wrap_key_data(base_seed)
+        key = jax.random.fold_in(base, step)
+        m = probe_ids.shape[0]
+        gs, losses, upds_list = [], [], []
+        for j in range(m):
+            seed = prng.seed_from_key(jax.random.fold_in(key, probe_ids[j]))
+            g, logits_p, acts_p = engine.probe_pair(
+                forward, zo_part, bp_part, batch, seed)
+            gs.append(g)
+            losses.append(float_loss(logits_p, batch["y"]))
+            upds_list.append(engine.tail_updates(bp_part, acts_p, logits_p,
+                                                 batch["y"]))
+        combined = engine.combine_tail(upds_list)
+        # full bp coverage (zeros for non-tail-FC leaves) so the flat
+        # payload aligns with the schema's QTensor-leaf order
+        payload = {name: combined.get(
+            name, jnp.zeros(sub["w"].data.shape, jnp.int8))
+            for name, sub in bp_part.items()}
+        return jnp.stack(gs), payload, jnp.stack(losses)
+
+    return jax.jit(probe_eval)
+
+
 def make_quantize_fn():
     """Jitted error-feedback int8 compression (train/compress.py)."""
     return jax.jit(compress_tree)
 
 
 def zero_residual(schema: ReplaySchema):
+    if schema.numerics == "int8":
+        return None          # int8 tail payloads are exact: no residual
     return jax.tree_util.tree_unflatten(
         schema.tail_treedef,
         [jnp.zeros(s, jnp.float32) for s in schema.tail_shapes])
@@ -114,6 +161,20 @@ def compute_record(params, residual, batch, step: int, worker: int,
     """
     m = schema.fleet.probes_per_worker
     ids = jnp.arange(worker * m, (worker + 1) * m, dtype=jnp.int32)
+    seeds = probe_seeds(schema, step)[worker * m:(worker + 1) * m]
+    if schema.numerics == "int8":
+        gs, payload, losses = probe_fn(params, batch, jnp.int32(step), ids,
+                                       jnp.asarray(schema.base_seed))
+        # flatten against the schema's QTensor-leaf order: payload is a
+        # {layer: upd} dict over the tail FCs; absent layers ship zeros
+        flat, _ = jax.tree_util.tree_flatten(payload)
+        rec = Record(
+            step=step, worker=worker, seeds=seeds,
+            deltas=np.asarray(gs, np.int8),
+            loss=float(np.float32(np.mean(np.asarray(losses, np.float32)))),
+            tail_q=[np.asarray(x, np.int8).reshape(-1) for x in flat],
+            numerics="int8")
+        return rec, None
     lp, lm, tail = probe_fn(params, batch, jnp.int32(step), ids,
                             jnp.asarray(schema.base_seed))
     lp = np.asarray(lp, np.float32)
@@ -121,7 +182,7 @@ def compute_record(params, residual, batch, step: int, worker: int,
     q_tree, s_tree, new_res = quantize_fn(tail, residual)
     rec = Record(
         step=step, worker=worker,
-        seeds=probe_seeds(schema, step)[worker * m:(worker + 1) * m],
+        seeds=seeds,
         deltas=lp - lm,
         loss=float(np.float32(np.mean(np.float32(0.5) * (lp + lm)))),
         tail_q=[np.asarray(x).reshape(-1)
@@ -133,11 +194,12 @@ def compute_record(params, residual, batch, step: int, worker: int,
 
 
 class Worker:
-    """One simulated edge device. Owns params, an EF residual, and its
-    probe block; everything else arrives over the (chaos) transport."""
+    """One simulated edge device. Owns params, an EF residual (fp32
+    lane), and its probe block; everything else arrives over the (chaos)
+    transport."""
 
     def __init__(self, worker_id: int, params, schema: ReplaySchema,
-                 probe_fn, quantize_fn, ckpt_dir: Optional[str] = None):
+                 probe_fn, quantize_fn=None, ckpt_dir: Optional[str] = None):
         self.id = worker_id
         self.schema = schema
         self.params = params

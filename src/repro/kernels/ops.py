@@ -16,6 +16,8 @@ from . import ref
 from .int8_matmul import int8_matmul as _pallas_int8_matmul
 from .paged_attn import paged_attention as _pallas_paged_attention
 from .zo_fused_replay import zo_fused_replay as _pallas_zo_fused_replay
+from .zo_fused_replay import \
+    zo_fused_replay_int8 as _pallas_zo_fused_replay_int8
 from .zo_perturb import int8_perturb as _pallas_int8_perturb
 from .zo_perturb import zo_perturb as _pallas_zo_perturb
 
@@ -64,6 +66,21 @@ def zo_fused_replay(theta, seeds, coeffs, salt: int, *,
                                        interpret=interpret)
     return ref.zo_fused_replay_ref(theta, jnp.asarray(seeds, jnp.uint32),
                                    jnp.asarray(coeffs, jnp.float32), salt)
+
+
+def zo_fused_replay_int8(theta, seeds, gs, salt: int, r_max: int, p_zero,
+                         shift: int, *, force_pallas: bool = False,
+                         interpret: bool = False):
+    """int8-lane fused ledger replay: S steps x P (seed, ternary g)
+    records in one pass over an int8 leaf. Integer arithmetic, so the
+    Pallas kernel and the eager ref agree bitwise on every backend."""
+    if _on_tpu() or force_pallas:
+        return _pallas_zo_fused_replay_int8(theta, seeds, gs, salt,
+                                            int(r_max), p_zero, int(shift),
+                                            interpret=interpret)
+    return ref.zo_fused_replay_int8_ref(
+        theta, jnp.asarray(seeds, jnp.uint32), jnp.asarray(gs, jnp.int32),
+        salt, int(r_max), p_zero, int(shift))
 
 
 def int8_perturb(theta, seed, salt: int, k, r_max, p_zero, *,

@@ -56,6 +56,34 @@ def zo_fused_replay_ref(theta: jax.Array, seeds: jax.Array,
     return x.reshape(shape).astype(dtype)
 
 
+def zo_fused_replay_int8_ref(theta: jax.Array, seeds: jax.Array,
+                             gs: jax.Array, salt: int, r_max: int,
+                             p_zero, shift: int):
+    """int8-lane twin of zo_fused_replay_ref (docs/fleet.md record v2).
+
+    Per committed step the per-probe integer updates psr(g*z, shift) are
+    accumulated in int32 in probe order and clamped ONCE to [-127, 127]
+    — the integer analogue of the fp32 accumulate-then-cast, stated by
+    the engine (core/engine.py Int8Engine.zo_apply). Masked probes carry
+    g = 0, an exact no-op. Integer ops are immune to FMA contraction, so
+    this path matches the Pallas kernel and the live traced step bitwise
+    on every backend.
+    """
+    from ..core.int8 import int8_noise, psr_shift
+    S, P = seeds.shape
+    n = theta.size
+    x = theta.reshape(-1).astype(jnp.int32)
+    pz = jnp.float32(p_zero)
+    for s in range(S):
+        acc = jnp.zeros((n,), jnp.int32)
+        for p in range(P):
+            z = int8_noise(seeds[s, p], salt, (n,), r_max, pz)
+            acc = acc + psr_shift(gs[s, p].astype(jnp.int32) * z,
+                                  jnp.int32(shift))
+        x = jnp.clip(x - acc, -127, 127)
+    return x.astype(jnp.int8).reshape(theta.shape)
+
+
 def int8_perturb_ref(theta: jax.Array, seed: jax.Array, salt: int, k: int,
                      r_max: int, p_zero: jax.Array):
     """Alg. 2 perturbation on an int8 leaf (clamped +/- sparse uniform)."""

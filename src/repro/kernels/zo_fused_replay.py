@@ -32,7 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .zo_perturb import BLOCK_ROWS, LANES, _normal_block
+from ..core.int8 import psr_shift
+from .zo_perturb import BLOCK_ROWS, LANES, _int8_noise_block, _normal_block
 
 
 def _replay_kernel(n_steps, n_probes, seeds_ref, coeffs_ref, salt_ref,
@@ -60,7 +61,8 @@ def zo_fused_replay(theta: jax.Array, seeds: jax.Array, coeffs: jax.Array,
     """Apply S ledger steps of P probes each to one parameter leaf.
 
     theta: any shape/dtype; seeds uint32 [S, P]; coeffs fp32 [S, P]
-    (coeff = -eta*g/valid per accepted probe, exactly 0 for masked ones).
+    (coeff = eta*g/valid per accepted probe — core/engine.py
+    host_coeffs — exactly 0 for masked ones).
     The z stream is bitwise ref.zo_fused_replay_ref; the accumulated AXPY
     matches it to within FMA-contraction rounding (same 1-ulp contract as
     kernels/zo_perturb.py). Off-TPU the dispatch (kernels/ops.py) always
@@ -88,5 +90,67 @@ def zo_fused_replay(theta: jax.Array, seeds: jax.Array, coeffs: jax.Array,
     )(seeds.reshape(-1).astype(jnp.uint32),
       coeffs.reshape(-1).astype(jnp.float32),
       jnp.asarray([salt], jnp.uint32),
+      flat.reshape(rows_pad, LANES))
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+# ------------------------------------------------------------------ #
+# int8 lane (Alg. 2): the ledger carries (seed, ternary g) per probe
+# ------------------------------------------------------------------ #
+def _replay_int8_kernel(n_steps, n_probes, shift, seeds_ref, gs_ref,
+                        salt_ref, rmax_ref, pz_ref, t_ref, o_ref):
+    rows = t_ref.shape[0]
+    row0 = pl.program_id(0) * rows
+    x = t_ref[...].astype(jnp.int32)
+
+    def step_body(s, x):
+        acc = jnp.zeros_like(x)
+        for p in range(n_probes):          # static, small (probes per step)
+            z = _int8_noise_block(jnp.uint32(row0), x.shape,
+                                  seeds_ref[s * n_probes + p], salt_ref[0],
+                                  rmax_ref[0], pz_ref[0])
+            acc = acc + psr_shift(gs_ref[s * n_probes + p] * z,
+                                  jnp.int32(shift))
+        # int32 accumulate in probe order, ONE clamp per step — the
+        # integer twin of the fp32 accumulate-then-cast (engine contract)
+        return jnp.clip(x - acc, -127, 127)
+
+    x = jax.lax.fori_loop(0, n_steps, step_body, x)
+    o_ref[...] = x.astype(jnp.int8)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("salt", "r_max", "shift", "interpret"))
+def zo_fused_replay_int8(theta: jax.Array, seeds: jax.Array, gs: jax.Array,
+                         salt: int, r_max: int, p_zero, shift: int, *,
+                         interpret: bool = False):
+    """Apply S int8 ledger steps of P probes each to one int8 leaf.
+
+    theta int8; seeds uint32 [S, P]; gs int32 [S, P] ternary signs
+    (exactly 0 for masked probes — psr(0*z) = 0, an exact no-op, so no
+    renormalization exists in the int8 lane). Integer arithmetic is
+    associative, so unlike the fp32 kernel this path is bitwise equal to
+    ref.zo_fused_replay_int8_ref on every backend.
+    """
+    shape = theta.shape
+    S, P = seeds.shape
+    n = theta.size
+    rows = -(-n // LANES)
+    rows_pad = -(-rows // BLOCK_ROWS) * BLOCK_ROWS
+    flat = jnp.zeros((rows_pad * LANES,), jnp.int8).at[:n].set(
+        theta.reshape(-1))
+    out = pl.pallas_call(
+        functools.partial(_replay_int8_kernel, S, P, shift),
+        grid=(rows_pad // BLOCK_ROWS,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM)] * 5
+        + [pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_pad, LANES), jnp.int8),
+        interpret=interpret,
+    )(seeds.reshape(-1).astype(jnp.uint32),
+      gs.reshape(-1).astype(jnp.int32),
+      jnp.asarray([salt], jnp.uint32),
+      jnp.asarray([r_max], jnp.int32),
+      jnp.asarray(p_zero, jnp.float32).reshape(1),
       flat.reshape(rows_pad, LANES))
     return out.reshape(-1)[:n].reshape(shape)

@@ -48,6 +48,18 @@ def _normal_block(row0, shape, seed, salt):
     return r * jnp.cos(np.float32(2.0 * np.pi) * u2)
 
 
+def _int8_noise_block(row0, shape, seed, salt, r_max, p_zero):
+    """Alg. 2 sparse uniform int8 noise for a (rows, LANES) block —
+    bitwise core/int8.int8_noise on the same flat layout."""
+    bits_u = _hash_block(row0, shape, seed, 3 * salt + np.uint32(1))
+    bits_m = _hash_block(row0, shape, seed, 3 * salt + np.uint32(2))
+    u = (bits_u % (2 * r_max + 1).astype(jnp.uint32)).astype(jnp.int32) \
+        - r_max.astype(jnp.int32)
+    keep = (bits_m.astype(jnp.float32)
+            < (1.0 - p_zero) * np.float32(2 ** 32)).astype(jnp.int32)
+    return u * keep
+
+
 def _perturb_kernel(seed_ref, salt_ref, scale_ref, t_ref, o_ref):
     rows = t_ref.shape[0]
     row0 = pl.program_id(0) * rows
@@ -95,16 +107,8 @@ def zo_perturb(theta: jax.Array, seed: jax.Array, salt: int,
 def _int8_kernel(seed_ref, salt_ref, k_ref, rmax_ref, pz_ref, t_ref, o_ref):
     rows = t_ref.shape[0]
     row0 = pl.program_id(0) * rows
-    bits_u = _hash_block(jnp.uint32(row0), t_ref.shape, seed_ref[0],
-                         3 * salt_ref[0] + np.uint32(1))
-    bits_m = _hash_block(jnp.uint32(row0), t_ref.shape, seed_ref[0],
-                         3 * salt_ref[0] + np.uint32(2))
-    r_max = rmax_ref[0]
-    u = (bits_u % (2 * r_max + 1).astype(jnp.uint32)).astype(jnp.int32) \
-        - r_max.astype(jnp.int32)
-    keep = (bits_m.astype(jnp.float32)
-            < (1.0 - pz_ref[0]) * np.float32(2 ** 32)).astype(jnp.int32)
-    z = u * keep
+    z = _int8_noise_block(jnp.uint32(row0), t_ref.shape, seed_ref[0],
+                          salt_ref[0], rmax_ref[0], pz_ref[0])
     o_ref[...] = jnp.clip(t_ref[...].astype(jnp.int32) + k_ref[0] * z,
                           -127, 127).astype(jnp.int8)
 

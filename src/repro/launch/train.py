@@ -78,9 +78,12 @@ def main(argv=None):
                                  jnp.dtype(cfg.dtype))
         return b
 
-    loop = LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
-                      log_every=max(args.steps // 10, 1),
-                      probe_drop_rate=args.probe_drop, n_probes=args.probes)
+    # n_probes is derived from the lane (LoopConfig.for_lane): the step
+    # asserts the mask shape, so the two can never drift apart again
+    loop = LoopConfig.for_lane(lane, total_steps=args.steps,
+                               ckpt_dir=args.ckpt_dir,
+                               log_every=max(args.steps // 10, 1),
+                               probe_drop_rate=args.probe_drop)
     state, history = run(model.train_step, state, batch_fn, loop,
                          param_shardings=pshard)
     print(f"[train] done at step {int(state.step)}; "

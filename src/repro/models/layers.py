@@ -18,6 +18,7 @@ no ``lax.scan``, so ``cost_analysis`` sees every FLOP (docs/design.md §7).
 from __future__ import annotations
 
 import math
+import zlib
 from typing import Optional, Tuple
 
 import jax
@@ -38,8 +39,12 @@ def dense_init(key, shape, dtype, fan_in=None):
 
 
 def subkey(key, *path):
+    # crc32, not builtin hash(): str hashes are salted per process, which
+    # would make init streams irreproducible across runs (design.md §9)
     for p in path:
-        key = jax.random.fold_in(key, hash(p) % (2**31))
+        d = p if isinstance(p, int) \
+            else zlib.crc32(str(p).encode()) % (2**31)
+        key = jax.random.fold_in(key, d)
     return key
 
 

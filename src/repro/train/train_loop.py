@@ -43,6 +43,18 @@ class LoopConfig:
     # the stream by ~1 ulp vs the fleet's update path).
     jit: bool = True
 
+    @classmethod
+    def for_lane(cls, lane, **kwargs) -> "LoopConfig":
+        """Derive the probe count from the lane instead of hand-syncing.
+
+        The engine-built step asserts its probe_mask shape against the
+        lane, so a mismatched manual ``n_probes`` fails loudly at trace
+        time; this constructor makes it impossible to mismatch.
+        """
+        assert "n_probes" not in kwargs, \
+            "n_probes is derived from lane.zo_num_probes"
+        return cls(n_probes=lane.zo_num_probes, **kwargs)
+
 
 def init_state(params, seed: int) -> TrainState:
     return TrainState(params, jnp.int32(0),

@@ -1,0 +1,206 @@
+"""repro.fleet int8 lane acceptance: chaos fleet == single process, bitwise.
+
+The int8 twin of tests/test_fleet.py: an 8-worker ElasticZO-INT8 (Alg. 2)
+chaos run — transport dropout, stragglers, a mid-run crash/rejoin via
+ledger replay — must hold every worker and the single-process reference
+bit-exact, with record-v2 ledger probes at 9 bytes each. Plus the "one
+update engine" proof: a degenerate 1-worker fleet reproduces the
+engine-built single-process elastic_int8 train step exactly.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import FleetConfig, LaneConfig
+from repro.core.elastic import TrainState
+from repro.core.elastic_int8 import make_int8_elastic_step
+from repro.core.int8 import quant_from_float
+from repro.data.synthetic import glyphs
+from repro.fleet import (Ledger, make_int8_probe_fn, make_reference_step,
+                         make_replay_fn, reference_state, run_fleet)
+from repro.models import lenet
+from repro.train import checkpoint as ckpt
+from repro.train.train_loop import LoopConfig, run
+
+WORKERS = 8
+STEPS = 8
+CRASH = (5, 3, 3)        # worker 5 dies at step 3, rejoins at step 6
+BATCH = 8
+TAIL_FCS = [("fc3", "fc3_in")]
+
+
+def _bitwise_equal(a, b):
+    return all(jnp.array_equal(x, y)
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _partition(p):
+    return lenet.partition_at(p, 4)
+
+
+def _batch_fn(step):
+    xs, ys = glyphs(BATCH, seed=1, start=step * BATCH)
+    return {"x": quant_from_float(jnp.asarray(xs)), "y": jnp.asarray(ys)}
+
+
+@pytest.fixture(scope="module")
+def int8_fleet_run():
+    lane = LaneConfig(lane="elastic_zo_int8", zo_num_probes=1)
+    probe_fn = make_int8_probe_fn(lenet.lenet5_forward_int8, lane,
+                                  _partition, TAIL_FCS)
+    params = lenet.init_lenet5_int8(jax.random.key(0))
+    base_seed = jax.random.key_data(jax.random.key(1))
+    fleet_cfg = FleetConfig(num_workers=WORKERS, probes_per_worker=1,
+                            dropout=0.25, max_delay=2, deadline=1,
+                            chaos_seed=3, snapshot_every=4,
+                            crashes=(CRASH,))
+    res = run_fleet(None, params, lane, fleet_cfg, _batch_fn, steps=STEPS,
+                    base_seed=base_seed, partition_fn=_partition,
+                    probe_fn=probe_fn, trace=True)
+    return dict(res=res, params=params, lane=lane, probe_fn=probe_fn,
+                base_seed=base_seed)
+
+
+def test_chaos_exercised_and_nine_byte_probes(int8_fleet_run):
+    res = int8_fleet_run["res"]
+    assert res.stats["n_dropped"] > 0, "dropout chaos never fired"
+    assert res.stats["n_straggled"] > 0, "latency chaos never fired"
+    assert res.stats["n_catchups"] == 1
+    assert res.stats["bytes_catchup"] > 0
+    w, cs, down = CRASH
+    for t in range(cs, cs + down):
+        assert res.masks[t][w] == 0.0
+    # ROADMAP claim, asserted: the int8 lane's ZO part costs <= 9
+    # bytes/probe on the wire (u64 seed + ternary-sign byte, record v2)
+    for step_recs in res.ledger.records.values():
+        for rec in step_recs.values():
+            assert rec.numerics == "int8"
+            assert rec.zo_probe_nbytes <= 9
+            assert len(rec.to_bytes()) == rec.nbytes
+    n_records = sum(len(t) for t in res.ledger.records.values())
+    hdr = 11
+    assert res.ledger.bytes_zo == n_records * (hdr + 9)
+
+
+def test_workers_bitwise_in_sync_with_coordinator(int8_fleet_run):
+    res = int8_fleet_run["res"]
+    for w in res.workers:
+        assert w.alive and w.step == STEPS
+        assert _bitwise_equal(w.params, res.params), f"worker {w.id}"
+
+
+def test_int8_fleet_reproduces_single_process_reference(int8_fleet_run):
+    """The acceptance bar: the 8-worker int8 chaos run's canonical
+    parameter stream == train_loop.run over the single-process reference
+    with the realized probe masks, bit-exactly at every step."""
+    res = int8_fleet_run["res"]
+    step_fn = make_reference_step(None, res.schema,
+                                  probe_fn=int8_fleet_run["probe_fn"])
+    state = reference_state(int8_fleet_run["params"], res.schema,
+                            int8_fleet_run["base_seed"])
+    trace = []
+
+    def recording_step(s, batch, mask):
+        s2, metrics = step_fn(s, batch, mask)
+        trace.append(jax.tree.map(np.asarray, s2.params["model"]))
+        return s2, metrics
+
+    loop = LoopConfig(total_steps=STEPS, log_every=0,
+                      n_probes=res.schema.n_probes,
+                      mask_fn=lambda t: res.masks[t], jit=False)
+    run(recording_step, state, _batch_fn, loop)
+    assert len(trace) == STEPS == len(res.param_trace)
+    for t, (a, b) in enumerate(zip(res.param_trace, trace)):
+        assert _bitwise_equal(a, b), f"param stream diverged at step {t}"
+
+
+def test_delta_checkpoint_restore_int8(int8_fleet_run, tmp_path):
+    """Delta checkpoints hold int8 records: save_delta(base, slice) +
+    restore(replay_fn) lands on the canonical int8 params bit-exactly."""
+    res = int8_fleet_run["res"]
+    base_step, base = res.coordinator.nearest_snapshot(STEPS - 1)
+    assert base_step < STEPS, "want a real replay, not a trivial one"
+    ckpt.save(tmp_path, base_step, base)
+    ckpt.save_delta(tmp_path, STEPS, base_step,
+                    res.ledger.slice_bytes(base_step, STEPS))
+    restored, at = ckpt.restore(tmp_path, int8_fleet_run["params"],
+                                replay_fn=make_replay_fn(res.schema))
+    assert at == STEPS
+    assert _bitwise_equal(restored, res.params)
+
+
+def test_one_engine_fleet_equals_single_process_step():
+    """The tentpole contract: a 1-worker no-chaos int8 fleet and the
+    engine-built elastic_int8 train step produce the same parameter
+    stream bit for bit — ledger apply and live step are one engine."""
+    lane = LaneConfig(lane="elastic_zo_int8", zo_num_probes=1)
+    probe_fn = make_int8_probe_fn(lenet.lenet5_forward_int8, lane,
+                                  _partition, TAIL_FCS)
+    params = lenet.init_lenet5_int8(jax.random.key(4))
+    base_seed = jax.random.key_data(jax.random.key(5))
+    res = run_fleet(None, params, lane,
+                    FleetConfig(num_workers=1, probes_per_worker=1),
+                    _batch_fn, steps=4, base_seed=base_seed,
+                    partition_fn=_partition, probe_fn=probe_fn)
+
+    step = jax.jit(make_int8_elastic_step(
+        lenet.lenet5_forward_int8, partition_fn=_partition,
+        tail_fcs=TAIL_FCS, lane=lane))
+    state = TrainState(params, jnp.int32(0), jnp.asarray(base_seed))
+    for t in range(4):
+        state, _ = step(state, _batch_fn(t), jnp.ones((1,), jnp.float32))
+    assert _bitwise_equal(state.params, res.params)
+
+
+def test_multi_probe_int8_fleet_matches_reference():
+    """3 workers x 2 probes, full-ZO int8 (no tail payload on the wire),
+    fresh-joiner ledger replay."""
+    lane = LaneConfig(lane="elastic_zo_int8", zo_num_probes=2)
+    part = lambda p: lenet.partition_at(p, 5)  # noqa: E731
+    probe_fn = make_int8_probe_fn(lenet.lenet5_forward_int8, lane,
+                                  part, [])
+    params = lenet.init_lenet5_int8(jax.random.key(2))
+    base_seed = jax.random.key_data(jax.random.key(3))
+    fleet_cfg = FleetConfig(num_workers=3, probes_per_worker=2,
+                            dropout=0.3, chaos_seed=11, snapshot_every=10)
+    res = run_fleet(None, params, lane, fleet_cfg, _batch_fn, steps=4,
+                    base_seed=base_seed, partition_fn=part,
+                    probe_fn=probe_fn)
+    rec = next(iter(res.ledger.records[0].values()))
+    assert rec.tail_q == [] and rec.zo_nbytes == 11 + 2 * 9
+
+    step_fn = make_reference_step(None, res.schema, probe_fn=probe_fn)
+    state = reference_state(params, res.schema, base_seed)
+    loop = LoopConfig(total_steps=4, log_every=0, n_probes=6,
+                      mask_fn=lambda t: res.masks[t], jit=False)
+    state, _ = run(step_fn, state, _batch_fn, loop)
+    assert _bitwise_equal(state.params["model"], res.params)
+
+    # a brand-new joiner replays the whole int8 ledger from step 0
+    joined = make_replay_fn(res.schema)(params, res.ledger.to_bytes(), 0, 4)
+    assert _bitwise_equal(joined, res.params)
+
+
+def test_int8_replay_kernel_parity():
+    """Pallas int8 fused-replay kernel (interpret mode) == eager ref,
+    bitwise, and a fused multi-step pass == live stepping."""
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(7)
+    theta = jnp.asarray(rng.integers(-127, 128, (1000,)), jnp.int8)
+    seeds = jnp.asarray(rng.integers(0, 2**32, (3, 2)), jnp.uint32)
+    gs = jnp.asarray(rng.integers(-1, 2, (3, 2)), jnp.int32)
+    r = ref.zo_fused_replay_int8_ref(theta, seeds, gs, 13, 3, 0.33, 1)
+    k = ops.zo_fused_replay_int8(theta, seeds, gs, 13, 3, 0.33, 1,
+                                 force_pallas=True, interpret=True)
+    assert jnp.array_equal(r, k)
+    live = theta
+    for s in range(3):
+        live = ops.zo_fused_replay_int8(live, seeds[s:s + 1], gs[s:s + 1],
+                                        13, 3, 0.33, 1)
+    assert jnp.array_equal(r, live)
+    # masked probes (g = 0) are an exact no-op
+    out = ops.zo_fused_replay_int8(theta, seeds, jnp.zeros_like(gs),
+                                   13, 3, 0.33, 1)
+    assert jnp.array_equal(out, theta)

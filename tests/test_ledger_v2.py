@@ -1,0 +1,174 @@
+"""Record-v2 wire format: fp32/int8 numerics tags, round-trips, rejection.
+
+Random records of both lanes go through serialize -> parse with
+field-exact recovery asserted, plus the negative space: truncated
+buffers and corrupt tags must raise ValueError, never mis-parse
+(docs/fleet.md wire format). With hypothesis installed the checks run
+as property tests; without it (optional dep) they degrade to seeded
+parametrized sweeps so the contract is still exercised.
+"""
+import numpy as np
+import pytest
+
+from repro.fleet import Commit, Ledger, Record
+
+try:  # optional dep (tier1-minimal CI lane runs without it)
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _fp32_record(rng, step, worker, m, n_leaves):
+    return Record(
+        step=step, worker=worker,
+        seeds=rng.integers(0, 2**63, (m,)).astype(np.uint64),
+        deltas=rng.normal(size=(m,)).astype(np.float32),
+        loss=float(np.float32(rng.normal())),
+        tail_q=[rng.integers(-127, 128, (int(s),)).astype(np.int8)
+                for s in rng.integers(0, 17, (n_leaves,))],
+        tail_scales=np.abs(rng.normal(size=(n_leaves,))).astype(np.float32))
+
+
+def _int8_record(rng, step, worker, m, n_leaves):
+    return Record(
+        step=step, worker=worker,
+        seeds=rng.integers(0, 2**63, (m,)).astype(np.uint64),
+        deltas=rng.integers(-1, 2, (m,)).astype(np.int8),
+        loss=float(np.float32(rng.normal())),
+        tail_q=[rng.integers(-127, 128, (int(s),)).astype(np.int8)
+                for s in rng.integers(0, 17, (n_leaves,))],
+        numerics="int8")
+
+
+def _make(numerics):
+    return _int8_record if numerics == "int8" else _fp32_record
+
+
+def _assert_same(a: Record, b: Record):
+    assert (a.step, a.worker, a.numerics) == (b.step, b.worker, b.numerics)
+    assert np.array_equal(a.seeds, b.seeds)
+    assert a.deltas.dtype == b.deltas.dtype
+    assert np.array_equal(a.deltas, b.deltas)
+    assert a.loss == b.loss
+    assert len(a.tail_q) == len(b.tail_q)
+    assert all(np.array_equal(x, y) for x, y in zip(a.tail_q, b.tail_q))
+    assert np.array_equal(a.tail_scales, b.tail_scales)
+
+
+# ---- the three properties (plain functions) ------------------------- #
+def check_roundtrip(seed, step, numerics, m, n_leaves):
+    rng = np.random.default_rng(seed)
+    rec = _make(numerics)(rng, step, seed % 32, m, n_leaves)
+    led = Ledger()
+    led.append_record(rec)
+    led.append_commit(Commit(step, 1 << (seed % 32)))
+    led2 = Ledger.from_bytes(led.to_bytes())
+    _assert_same(led2.records[step][seed % 32], rec)
+    assert led2.commits[step].accepted == 1 << (seed % 32)
+    assert led2.bytes_zo == led.bytes_zo
+    assert led2.bytes_tail == led.bytes_tail
+
+
+def check_truncated(seed, numerics, cut):
+    rng = np.random.default_rng(seed)
+    rec = _make(numerics)(rng, 3, 1, 2, 2)
+    led = Ledger()
+    led.append_record(rec)
+    led.append_commit(Commit(3, 0b10))
+    buf = led.to_bytes()
+    cut = cut % (len(buf) - 1) + 1      # strictly shorter, non-empty
+    truncated = buf[:len(buf) - cut]
+    try:
+        led2 = Ledger.from_bytes(truncated)
+    except ValueError:
+        return                           # rejected: good
+    # a prefix that happens to end on a record boundary parses cleanly
+    # but must never invent bytes
+    assert led2.nbytes <= led.nbytes
+
+
+def check_corrupt_tag(seed, bad_tag):
+    if bad_tag in (0x52, 0x43, 0x49):   # valid tags
+        bad_tag = 0x00
+    rng = np.random.default_rng(seed)
+    led = Ledger()
+    led.append_record(_fp32_record(rng, 0, 0, 1, 1))
+    led.append_commit(Commit(0, 1))
+    buf = bytearray(led.to_bytes())
+    buf[0] = bad_tag
+    with pytest.raises(ValueError):
+        Ledger.from_bytes(bytes(buf))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=40)
+    @given(st.integers(0, 10**6), st.integers(0, 2**31 - 1),
+           st.sampled_from(["fp32", "int8"]), st.integers(1, 8),
+           st.integers(0, 4))
+    def test_record_roundtrip(seed, step, numerics, m, n_leaves):
+        check_roundtrip(seed, step, numerics, m, n_leaves)
+
+    @settings(deadline=None, max_examples=40)
+    @given(st.integers(0, 10**6), st.sampled_from(["fp32", "int8"]),
+           st.integers(1, 200))
+    def test_truncated_buffer_rejected(seed, numerics, cut):
+        check_truncated(seed, numerics, cut)
+
+    @settings(deadline=None, max_examples=30)
+    @given(st.integers(0, 10**6), st.integers(0, 255))
+    def test_corrupt_tag_rejected(seed, bad_tag):
+        check_corrupt_tag(seed, bad_tag)
+else:
+    @pytest.mark.parametrize("seed", range(10))
+    @pytest.mark.parametrize("numerics", ["fp32", "int8"])
+    def test_record_roundtrip(seed, numerics):
+        check_roundtrip(seed * 7919, seed * 13 + 1, numerics,
+                        seed % 8 + 1, seed % 5)
+
+    @pytest.mark.parametrize("seed", range(10))
+    @pytest.mark.parametrize("numerics", ["fp32", "int8"])
+    def test_truncated_buffer_rejected(seed, numerics):
+        for cut in (1, 2, 5, 13, 40, 97):
+            check_truncated(seed, numerics, cut)
+
+    @pytest.mark.parametrize("bad_tag", [0x00, 0x01, 0x51, 0x44, 0xFF])
+    def test_corrupt_tag_rejected(bad_tag):
+        check_corrupt_tag(3, bad_tag)
+
+
+# ---- deterministic contract tests (no hypothesis needed) ------------ #
+def test_probe_entry_sizes():
+    """The paper's wire claim, literally: 12 B/probe fp32, 9 B/probe int8,
+    atop the common 11 B record header."""
+    rng = np.random.default_rng(0)
+    r32 = _fp32_record(rng, 0, 0, 3, 0)
+    r8 = _int8_record(rng, 0, 0, 3, 0)
+    assert r32.zo_probe_nbytes == 12 and r32.zo_nbytes == 11 + 3 * 12
+    assert r8.zo_probe_nbytes == 9 and r8.zo_nbytes == 11 + 3 * 9
+    assert len(r32.to_bytes()) == r32.nbytes
+    assert len(r8.to_bytes()) == r8.nbytes
+
+
+def test_mixed_lane_ledger_roundtrip():
+    """fp32 and int8 records interleave in one buffer (tag-dispatched)."""
+    rng = np.random.default_rng(1)
+    led = Ledger()
+    led.append_record(_fp32_record(rng, 0, 0, 2, 1))
+    led.append_record(_int8_record(rng, 0, 1, 2, 1))
+    led.append_commit(Commit(0, 0b11))
+    led2 = Ledger.from_bytes(led.to_bytes())
+    assert led2.records[0][0].numerics == "fp32"
+    assert led2.records[0][1].numerics == "int8"
+    _assert_same(led2.records[0][0], led.records[0][0])
+    _assert_same(led2.records[0][1], led.records[0][1])
+
+
+def test_empty_and_garbage():
+    assert Ledger.from_bytes(b"").commits == {}
+    with pytest.raises(ValueError):
+        Ledger.from_bytes(b"\x00\x01\x02")
+    # a lone commit truncated mid-struct
+    commit = Commit(5, 0b1).to_bytes()
+    with pytest.raises(ValueError):
+        Ledger.from_bytes(commit[:-2])

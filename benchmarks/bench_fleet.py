@@ -18,6 +18,13 @@ payload), the ZO bytes/worker/step against each lane's protocol floor
 record header is the only overhead), and the fp32/int8 ratios. Writes
 BENCH_fleet.json ({name, config, metrics}).
 
+``--byzantine 'w:attack[:amp],...'`` additionally measures training
+under attack (fleet/adversary.py) in each selected lane: final loss of
+the attack-free run vs the attacked run without and with the robust
+commit filter (fleet/robust.py), plus the filter's wall-clock overhead
+— the cost of Byzantine tolerance is a handful of host-side scalar
+medians per step.
+
 On CPU wall-clock measures protocol + engine overhead, not kernel speed;
 the bytes accounting is exact on any backend. ``--fast`` shrinks steps
 for the CI bench-smoke job.
@@ -25,14 +32,16 @@ for the CI bench-smoke job.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs import FleetConfig, LaneConfig, ShapeConfig, get_arch, reduced
+from repro.configs import (FleetConfig, LaneConfig, RobustConfig,
+                           ShapeConfig, get_arch, reduced)
 from repro.core import api
 from repro.data.synthetic import token_batch
-from repro.fleet import run_fleet
+from repro.fleet import parse_byzantine, run_fleet
 from repro.sharding.rules import ShardingRules
 
 from .bench_util import write_bench
@@ -53,6 +62,9 @@ def summarize(res, steps):
         "uplink_bytes_per_step": s["bytes_uplink"] / steps,
         "n_dropped": s["n_dropped"],
         "n_straggled": s["n_straggled"],
+        "n_rejected": s["n_rejected"],
+        "n_filtered_probes": s["n_filtered_probes"],
+        "n_quarantines": s["n_quarantines"],
         "final_loss": res.coordinator.loss_history[-1][1],
     }
 
@@ -101,6 +113,33 @@ def bench_int8(args, fleet_cfg, steps):
     return summarize(res, steps)
 
 
+def bench_byzantine(args, chaos, steps, free_metrics, runner, tag):
+    """Accuracy-under-attack + filter overhead for one lane.
+
+    runner(fleet_cfg) -> summarize() dict; `free_metrics` is the lane's
+    attack-free chaos-fleet summary (already measured by the main pass).
+    """
+    specs = parse_byzantine(args.byzantine)
+    attacked = dataclasses.replace(chaos, byzantine=specs)
+    robust = dataclasses.replace(attacked, robust=RobustConfig())
+    unfilt = runner(attacked)
+    filt = runner(robust)
+    overhead = filt["wall_s_per_step"] / max(unfilt["wall_s_per_step"],
+                                             1e-9)
+    out = {
+        "byz_final_loss_attack_free": free_metrics["final_loss"],
+        "byz_final_loss_unfiltered": unfilt["final_loss"],
+        "byz_final_loss_filtered": filt["final_loss"],
+        "byz_filter_wall_overhead": overhead,
+    }
+    print(f"# {tag} byzantine [{args.byzantine}]: final loss "
+          f"free {out['byz_final_loss_attack_free']:.4f} / "
+          f"attacked {out['byz_final_loss_unfiltered']:.4f} / "
+          f"filtered {out['byz_final_loss_filtered']:.4f}; "
+          f"filter wall x{overhead:.2f}")
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b")
@@ -113,6 +152,10 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--seq", type=int, default=32)
     ap.add_argument("--dropout", type=float, default=0.1)
+    ap.add_argument("--byzantine", default="",
+                    help="worker:attack[:amp] specs: also benchmark "
+                         "accuracy-under-attack and robust-filter "
+                         "overhead (fleet/adversary.py, fleet/robust.py)")
     ap.add_argument("--fast", action="store_true",
                     help="CI smoke scale (fewer steps, reduced arch)")
     ap.add_argument("--out", default="")
@@ -134,6 +177,11 @@ def main(argv=None):
         arch_name = setup[0].cfg.name
         fleet = bench_fp32(setup, chaos, args.steps)
         single = bench_fp32(setup, calm, args.steps)
+        if args.byzantine:
+            byz = bench_byzantine(
+                args, chaos, args.steps, fleet,
+                lambda cfg: bench_fp32(setup, cfg, args.steps), "fp32")
+            metrics.update({f"fleet_{k}": v for k, v in byz.items()})
         floor = args.probes_per_worker * 12
         metrics.update({f"fleet_{k}": v for k, v in fleet.items()})
         metrics.update({f"single_{k}": v for k, v in single.items()})
@@ -148,6 +196,11 @@ def main(argv=None):
         print(f"# fp32 single 1w: {single['wall_s_per_step']:.3f}s/step")
     if args.lane in ("both", "int8"):
         i8 = bench_int8(args, chaos, args.steps)
+        if args.byzantine:
+            byz8 = bench_byzantine(
+                args, chaos, args.steps, i8,
+                lambda cfg: bench_int8(args, cfg, args.steps), "int8")
+            metrics.update({f"int8_fleet_{k}": v for k, v in byz8.items()})
         floor8 = args.probes_per_worker * 9
         metrics.update({f"int8_fleet_{k}": v for k, v in i8.items()})
         metrics["int8_zo_bytes_floor_per_worker_step"] = floor8
@@ -175,6 +228,7 @@ def main(argv=None):
         "arch": arch_name, "lane": args.lane, "workers": args.workers,
         "probes_per_worker": args.probes_per_worker, "steps": args.steps,
         "batch": args.batch, "seq": args.seq, "dropout": args.dropout,
+        "byzantine": args.byzantine,
     }, metrics, out=args.out or None)
 
 

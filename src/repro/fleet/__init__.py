@@ -7,23 +7,32 @@ each step with a probe mask, and every participant — coordinator, worker,
 late joiner replaying the ledger, and the single-process reference — runs
 the identical canonical update, so the whole fleet stays bit-exact.
 
-Public surface: FleetConfig (configs/fleet.py), Ledger / Record / Commit,
-ChaosTransport, Worker, Coordinator, run_fleet, make_reference_step,
-ReplaySchema / replay / make_replay_fn.
+Public surface: FleetConfig / RobustConfig / ByzantineSpec
+(configs/fleet.py), Ledger / Record / Commit, ChaosTransport, Worker,
+Coordinator, run_fleet, make_reference_step, ReplaySchema / replay /
+make_replay_fn, Adversary / build_adversaries (fleet/adversary.py), and
+the robust-filter primitives RobustGate / filter_decision /
+QuarantineTracker (fleet/robust.py).
 """
-from ..configs.fleet import FleetConfig
+from ..configs.fleet import ByzantineSpec, FleetConfig, RobustConfig
+from .adversary import Adversary, build_adversaries, parse_byzantine
 from .coordinator import Coordinator
 from .ledger import Commit, Ledger, Record
 from .reference import make_reference_step, reference_state
 from .replay import (ReplaySchema, apply_step, ledger_step_arrays,
                      make_replay_fn, make_schema, probe_seeds, replay,
                      step_arrays, step_coeffs)
+from .robust import (FilterDecision, QuarantineTracker, RobustGate,
+                     filter_decision)
 from .simulation import FleetResult, run_fleet
 from .transport import ChaosTransport
 from .worker import Worker, make_int8_probe_fn, make_probe_fn
 
-__all__ = ["FleetConfig", "Ledger", "Record", "Commit", "ChaosTransport",
-           "Worker", "Coordinator", "run_fleet", "FleetResult",
+__all__ = ["FleetConfig", "RobustConfig", "ByzantineSpec", "Ledger",
+           "Record", "Commit", "ChaosTransport", "Worker", "Coordinator",
+           "run_fleet", "FleetResult", "Adversary", "build_adversaries",
+           "parse_byzantine", "RobustGate", "FilterDecision",
+           "QuarantineTracker", "filter_decision",
            "make_probe_fn", "make_int8_probe_fn", "make_reference_step",
            "reference_state", "ReplaySchema", "make_schema", "apply_step",
            "replay", "make_replay_fn", "ledger_step_arrays", "step_arrays",

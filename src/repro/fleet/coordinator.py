@@ -1,13 +1,25 @@
-"""Fleet coordinator: gather records, commit steps, keep the canon.
+"""Fleet coordinator: gather records, gate them, commit steps, keep the canon.
 
-Per step the coordinator waits ``deadline`` virtual ticks, accepts every
-record that made it, and closes the step with a Commit whose bitmask IS
-the probe mask — straggler mitigation is the same masking/renormalization
-the single-process loop uses for dropped probes (docs/design.md §8),
-promoted to a wire protocol. At least one record is always accepted: if
-the deadline passes empty the coordinator keeps waiting for the earliest
-delivery (infinite-retry semantics in the simulation), so a step can be
-late but never empty.
+Per step the coordinator waits ``deadline`` virtual ticks, routes every
+record that made it through the Byzantine-robust gate
+(fleet/robust.py: validation -> quarantine -> scalar/loss filter), and
+closes the step with a Commit whose bitmask IS the probe mask —
+straggler mitigation is the same masking/renormalization the
+single-process loop uses for dropped probes (docs/design.md §8),
+promoted to a wire protocol, and Byzantine mitigation is a refinement
+of the same mask (Commit v2 carries the post-filter probe bits and the
+quarantine set). Validation **rejects, never asserts**: a record with a
+diverged seed schedule, a stale step field, or the wrong numerics tag
+is dropped (and counted toward quarantine) instead of killing the
+fleet — the pre-robust ``assert`` here died under ``python -O`` and let
+one lying worker take everyone down.
+
+The coordinator keeps the "a step is never empty" liveness rule on a
+best-effort basis: if the deadline passes with no arrivals it waits for
+the earliest delivery, and if the gate rejects everything it admits
+later arrivals one at a time (earliest first). A step where *no* sound
+record exists commits empty — an exact parameter no-op — rather than
+accepting garbage.
 
 The coordinator also maintains the canonical parameter stream (applying
 exactly the same replay-module update as everyone else), periodic host
@@ -17,7 +29,7 @@ checkpoints.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -25,7 +37,8 @@ import jax
 import jax.numpy as jnp
 
 from .ledger import Commit, Ledger, Record
-from .replay import ReplaySchema, apply_step, probe_seeds, step_arrays
+from .replay import ReplaySchema, apply_step, step_arrays
+from .robust import RobustGate
 from .transport import Fate
 
 
@@ -41,44 +54,81 @@ class Coordinator:
         self.step = 0
         self.loss_history: List[Tuple[int, float]] = []
         self.events: List[str] = []
+        self.gate = RobustGate(schema)
+        self.arrival_history: List[int] = []   # realized on-time bits/step
+        self.n_rejected = 0                    # validation rejections
+        self.n_filtered = 0                    # filter-masked probes
 
     # ---- step protocol ------------------------------------------------- #
     def close_step(self, step: int,
                    arrivals: List[Tuple[Record, Fate]]) -> Tuple[Commit, Dict[int, Record]]:
-        """Deadline-gate the arrivals, commit, advance the canon."""
-        assert step == self.step and arrivals
+        """Deadline-gate the arrivals, filter, commit, advance the canon."""
+        if step != self.step or not arrivals:
+            raise ValueError(f"close_step({step}) out of order "
+                             f"(coordinator at {self.step})")
         deadline = self.schema.fleet.deadline
         on_time = [(r, f) for r, f in arrivals
                    if f.arrived_by(deadline)]
         if not on_time:
             # nobody made the deadline: wait for the earliest delivery
             # (or, if the transport dropped everything, the earliest
-            # retry) — a step is never empty.
+            # retry) — a step is never empty for lack of patience.
             pool = [(r, f) for r, f in arrivals if f.delivered] or arrivals
             pick = min(pool, key=lambda rf: (rf[1].delay, rf[0].worker))
             on_time = [pick]
             self.events.append(f"step {step}: empty deadline, waited for "
                                f"worker {pick[0].worker}")
-        accepted_mask = 0
-        records: Dict[int, Record] = {}
-        expect = probe_seeds(self.schema, step)
-        m = self.schema.fleet.probes_per_worker
-        for rec, _ in on_time:
-            w = rec.worker
-            assert np.array_equal(rec.seeds, expect[w * m:(w + 1) * m]), \
-                f"worker {w} seed schedule diverged at step {step}"
-            accepted_mask |= 1 << w
-            records[w] = rec
-        commit = Commit(step, accepted_mask)
+        # late arrivals the gate may pull in if it rejects everything,
+        # earliest-delivery first (deterministic)
+        on_time_ids = {id(r) for r, _ in on_time}
+        late = sorted(((r, f) for r, f in arrivals
+                       if id(r) not in on_time_ids and f.delivered),
+                      key=lambda rf: (rf[1].delay, rf[0].worker))
+        candidates = {rec.worker: rec for rec, _ in on_time}
+        result = self.gate.evaluate(step, candidates)
+        while result.commit.accepted == 0 and late:
+            rec, _ = late.pop(0)
+            if rec.worker in candidates:
+                continue
+            candidates[rec.worker] = rec
+            self.events.append(f"step {step}: gate empty, admitted late "
+                               f"worker {rec.worker}")
+            result = self.gate.evaluate(step, candidates)
+        self.gate.advance(step, result)
+        self.arrival_history.append(
+            sum(1 << w for w in candidates))
+        for w, reason in result.rejected:
+            self.n_rejected += reason != "quarantined"
+            self.events.append(f"step {step}: rejected worker {w} "
+                               f"({reason})")
+        for s, w, kind in self.gate.quarantine_events():
+            tag = f"step {s}: worker {w} quarantine {kind}"
+            if tag not in self.events:
+                self.events.append(tag)
+        commit, records = result.commit, result.records
+        if commit.accepted == 0:
+            self.events.append(f"step {step}: no sound record survived "
+                               f"the gate — empty commit (no-op step)")
         for w in sorted(records):
             self.ledger.append_record(records[w])
         self.ledger.append_commit(commit)
 
         seeds, deltas, mask, _ = step_arrays(commit, records, self.schema)
+        m = self.schema.fleet.probes_per_worker
+        self.n_filtered += int(sum(
+            m - mask[w * m:(w + 1) * m].sum()
+            for w in commit.workers(self.schema.fleet.num_workers)))
         self.params = apply_step(self.params, step, seeds, deltas, mask,
                                  records, self.schema)
-        valid = max(float(mask.sum()), 1.0)
-        loss = sum(records[w].loss * m for w in records) / valid
+        if mask.sum() > 0:
+            loss = sum(records[w].loss
+                       * float(mask[w * m:(w + 1) * m].sum())
+                       for w in records) / float(mask.sum())
+        else:
+            # no-op step (everything rejected/filtered): no observation —
+            # carry the last loss instead of recording a fictitious 0.0
+            loss = self.loss_history[-1][1] if self.loss_history \
+                else float("nan")
         self.loss_history.append((step, loss))
         self.step = step + 1
         if self.schema.fleet.snapshot_every and \
@@ -96,6 +146,17 @@ class Coordinator:
         return self.params
 
     def nearest_snapshot(self, step: int):
-        """(base_step, host params) — newest snapshot at or before `step`."""
-        base = max(s for s in self.snapshots if s <= step)
+        """(base_step, host params) — newest snapshot at or before `step`.
+
+        Raises ValueError (not an unhelpful ``max() of empty sequence``)
+        when every snapshot at or before `step` has been pruned — the
+        caller asked to restore into the past of the retention window.
+        """
+        held = [s for s in self.snapshots if s <= step]
+        if not held:
+            raise ValueError(
+                f"no snapshot at or before step {step}: retained "
+                f"{sorted(self.snapshots)} (keep_snapshots="
+                f"{self.keep_snapshots}); replay cannot run backwards")
+        base = max(held)
         return base, jax.tree.map(jnp.asarray, self.snapshots[base])

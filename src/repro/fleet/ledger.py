@@ -28,13 +28,24 @@ per-probe weight updates (already int8-native, no scale on the wire;
 the weight exponents never move, so dequantization state is static
 schema).
 
-The coordinator closes a step with a ``Commit``:
+The coordinator closes a step with a ``Commit``. v1 is filter-free:
 
     C | step u32 | accepted-worker bitmask u32
 
-A commit plus its accepted records is a pure function from params(step)
-to params(step+1) — see fleet/replay.py — so a ledger slice *is* a
-checkpoint delta (train/checkpoint.py delta mode stores exactly that).
+v2 additionally carries the Byzantine-robust filter outcome
+(fleet/robust.py): the quarantine set active during the step and the
+post-filter per-probe in-band bitmask (LSB-first over global probe ids):
+
+    V | step u32 | accepted u32 | quarantined u32
+      | n_filter_bytes u8 | filter bitmask bytes
+
+Old v1 commits decode as filter-free (``filtered is None``,
+``quarantined == 0``); a v1 writer is emitted whenever both fields are
+trivial, so filter-free ledgers stay byte-identical to the pre-robust
+protocol. A commit plus its accepted records is a pure function from
+params(step) to params(step+1) — see fleet/replay.py — so a ledger slice
+*is* a checkpoint delta (train/checkpoint.py delta mode stores exactly
+that).
 
 Tail leaf shapes/order are out-of-band schema (ReplaySchema), shared at
 enrollment; records carry only flat sizes as a consistency check.
@@ -53,7 +64,24 @@ _PROBE8 = struct.Struct("<Qb")            # seed u64, ternary g i8
 _LEAF_HDR = struct.Struct("<If")          # flat size u32, scale f32
 _LEAF_HDR8 = struct.Struct("<I")          # flat size u32 (int8: no scale)
 _COMMIT = struct.Struct("<BII")           # tag, step, accepted bitmask
+_COMMIT2 = struct.Struct("<BIIIB")        # tag, step, accepted, quarantined,
+#                                           n filter-mask bytes
 _TAG_R, _TAG_C, _TAG_I = 0x52, 0x43, 0x49  # 'R' fp32, 'C' commit, 'I' int8
+_TAG_V = 0x56                              # 'V' commit v2 (robust-filtered)
+
+
+def pack_bits(bits: np.ndarray) -> bytes:
+    """bool[n] -> LSB-first bitmask bytes (bit i of byte i//8 = bits[i])."""
+    return np.packbits(np.asarray(bits, bool), bitorder="little").tobytes()
+
+
+def unpack_bits(buf: bytes, n: int) -> np.ndarray:
+    """LSB-first bitmask bytes -> bool[n]."""
+    if len(buf) * 8 < n:
+        raise ValueError(f"filter bitmask holds {len(buf) * 8} bits, "
+                         f"need {n}")
+    return np.unpackbits(np.frombuffer(buf, np.uint8), count=n,
+                         bitorder="little").astype(bool)
 
 
 @dataclass
@@ -112,16 +140,38 @@ class Record:
 class Commit:
     step: int
     accepted: int                         # bitmask over worker ids
+    # -- v2 (Byzantine-robust) fields; trivial values write the v1 form --
+    quarantined: int = 0                  # bitmask: excluded this step
+    filtered: Optional[bytes] = None      # per-probe in-band bitmask
+    #                                       (LSB-first); None = filter-free
 
     def workers(self, num_workers: int) -> List[int]:
         return [w for w in range(num_workers) if self.accepted >> w & 1]
 
     @property
+    def version(self) -> int:
+        return 2 if (self.quarantined or self.filtered is not None) else 1
+
+    def inband(self, n_probes: int) -> np.ndarray:
+        """bool[n]: the post-filter in-band verdict (all ones if v1)."""
+        if self.filtered is None:
+            return np.ones((n_probes,), bool)
+        return unpack_bits(self.filtered, n_probes)
+
+    @property
     def nbytes(self) -> int:
-        return _COMMIT.size
+        if self.version == 1:
+            return _COMMIT.size
+        return _COMMIT2.size + len(self.filtered or b"")
 
     def to_bytes(self) -> bytes:
-        return _COMMIT.pack(_TAG_C, self.step, self.accepted)
+        if self.version == 1:
+            return _COMMIT.pack(_TAG_C, self.step, self.accepted)
+        bits = self.filtered or b""
+        if len(bits) > 255:
+            raise ValueError("commit filter mask exceeds u8 length field")
+        return _COMMIT2.pack(_TAG_V, self.step, self.accepted,
+                             self.quarantined, len(bits)) + bits
 
 
 def _parse_record(buf: bytes, off: int, numerics: str):
@@ -192,7 +242,9 @@ class Ledger:
         self.bytes_tail += rec.tail_nbytes
 
     def append_commit(self, commit: Commit):
-        assert commit.step not in self.commits, "ledger is append-only"
+        if commit.step in self.commits:    # raise, not assert: must hold
+            raise ValueError(               # under python -O too
+                f"ledger is append-only: step {commit.step} already closed")
         self.commits[commit.step] = commit
 
     def last_step(self) -> Optional[int]:
@@ -229,6 +281,16 @@ class Ledger:
                     _, step, mask = _COMMIT.unpack_from(buf, off)
                     off += _COMMIT.size
                     led.append_commit(Commit(step, mask))
+                elif tag == _TAG_V:
+                    _, step, mask, quar, nb = _COMMIT2.unpack_from(buf, off)
+                    off += _COMMIT2.size
+                    if off + nb > len(buf):
+                        raise ValueError(
+                            f"truncated commit filter mask at offset {off}")
+                    bits = buf[off:off + nb] if nb else None
+                    off += nb
+                    led.append_commit(Commit(step, mask, quarantined=quar,
+                                             filtered=bits))
                 elif tag == _TAG_R:
                     rec, off = _parse_record(buf, off, "fp32")
                     led.append_record(rec)

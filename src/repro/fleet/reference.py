@@ -1,14 +1,29 @@
 """Single-process reference of the fleet semantics, for train_loop.run.
 
 The acceptance bar for repro.fleet is not "close": an 8-worker chaos run
-must reproduce a single-process run bit-exactly — in both lanes. This
-module is that single process: one step function that computes every
-worker's probe block (fp32: quantizing every worker's tail with its own
-error-feedback residual; int8: exact NITI payloads, no residual) and
-applies the identical engine-routed replay update — sharing the very
-same jitted callables (worker.make_probe_fn / make_int8_probe_fn /
-make_quantize_fn) the fleet workers use, so there is no cross-program
-rounding to hand-wave about.
+must reproduce a single-process run bit-exactly — in both lanes, and
+now *with Byzantine workers in the loop*. This module is that single
+process: one step function that computes every worker's probe block
+(fp32: quantizing every worker's tail with its own error-feedback
+residual; int8: exact NITI payloads, no residual), applies the same
+deterministic record tampering (fleet/adversary.py), routes the result
+through the same Byzantine-robust gate (fleet/robust.py) the
+coordinator runs, and applies the identical engine-routed replay update
+— sharing the very same jitted callables (worker.make_probe_fn /
+make_int8_probe_fn / make_quantize_fn) the fleet workers use, so there
+is no cross-program rounding to hand-wave about.
+
+Two driving modes, selected by the schema:
+
+  * filter-free (fleet.robust is None and no byzantine specs): the
+    probe_mask fed by LoopConfig.mask_fn is the *realized commit mask*
+    of a fleet run — the pre-robust contract, unchanged.
+  * Byzantine (robust config and/or byzantine specs present): the
+    probe_mask is the *realized arrival mask* (FleetResult.
+    arrival_masks — which records made the deadline, before any
+    verdict); the reference re-derives validation, quarantine, and the
+    scalar/loss filter itself through its own RobustGate, and must land
+    on the bit-identical Commit (v2) and parameter stream.
 
 It is a host-side composite (run it with LoopConfig(jit=False)): jitting
 the whole step would re-fuse the shared sub-programs and shift the fp32
@@ -17,11 +32,13 @@ stream by FMA-contraction ulps (see kernels/ref.zo_fused_replay_ref).
 Worker-local state (the fp32 EF residuals) rides inside ``state.params``
 as ``{"model": ..., "residual": [one tail tree per worker]}`` so restart
 semantics stay a pure function of the checkpointed state. The int8 lane
-has no residual (its payloads are exact); the slot holds Nones.
+has no residual (its payloads are exact); the slot holds Nones. A
+Byzantine worker's residual follows the *honest* pending residual —
+tampering is wire-only (fleet/adversary.py), exactly like the fleet.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable, Dict, Optional
 
 import numpy as np
 
@@ -30,8 +47,10 @@ import jax.numpy as jnp
 
 from ..configs.base import LaneConfig
 from ..core.elastic import TrainState
+from .adversary import Adversary, build_adversaries
 from .ledger import Commit
 from .replay import ReplaySchema, apply_step, probe_seeds, step_arrays
+from .robust import RobustGate
 from .worker import (compute_record, make_probe_fn, make_quantize_fn,
                      zero_residual)
 
@@ -45,14 +64,17 @@ def reference_state(params, schema: ReplaySchema, seed) -> TrainState:
 
 
 def make_reference_step(loss_fn: Callable, schema: ReplaySchema,
-                        probe_fn=None, quantize_fn=None):
+                        probe_fn=None, quantize_fn=None,
+                        adversaries: Optional[Dict[int, Adversary]] = None):
     """(state, batch, probe_mask) -> (state, metrics), fleet semantics.
 
-    probe_mask fp32[n_probes] is block-constant per worker (the commit
-    bitmask expanded); pass the realized masks of a fleet run via
-    LoopConfig.mask_fn to reproduce it, or a drop-rate stream to simulate
-    one. For the int8 lane pass the shared ``probe_fn`` built by
-    worker.make_int8_probe_fn (there is no loss_fn-derived default).
+    probe_mask fp32[n_probes] is block-constant per worker; pass the
+    realized masks of a fleet run via LoopConfig.mask_fn to reproduce it
+    (arrival_masks for Byzantine runs, masks otherwise), or a drop-rate
+    stream to simulate one. For the int8 lane pass the shared
+    ``probe_fn`` built by worker.make_int8_probe_fn (there is no
+    loss_fn-derived default). ``adversaries`` defaults to the schema's
+    own byzantine specs — pass {} to force the honest reference.
     """
     lane: LaneConfig = schema.lane
     fleet = schema.fleet
@@ -63,6 +85,10 @@ def make_reference_step(loss_fn: Callable, schema: ReplaySchema,
         probe_fn = make_probe_fn(loss_fn, lane, schema.partition_fn)
     if quantize_fn is None and schema.numerics == "fp32":
         quantize_fn = make_quantize_fn()
+    if adversaries is None:
+        adversaries = build_adversaries(fleet)
+    byzantine_path = bool(adversaries) or fleet.robust is not None
+    gate = RobustGate(schema) if byzantine_path else None
 
     def step(state: TrainState, batch, probe_mask):
         t = int(state.step)
@@ -71,33 +97,53 @@ def make_reference_step(loss_fn: Callable, schema: ReplaySchema,
         mask = np.asarray(probe_mask, np.float32)
         assert mask.shape == (W * m,)
 
-        accepted_bits = 0
-        records, new_residuals = {}, []
+        records, pendings = {}, {}
         for w in range(W):
             rec, pending = compute_record(model, residuals[w], batch, t, w,
                                           schema, probe_fn, quantize_fn)
+            if w in adversaries:
+                rec = adversaries[w].tamper(rec, t)
             records[w] = rec
-            if mask[w * m] > 0:
-                accepted_bits |= 1 << w
-                new_residuals.append(pending)
+            pendings[w] = pending
+
+        if byzantine_path:
+            # probe_mask = realized ARRIVAL mask: gate exactly like the
+            # coordinator (validation -> quarantine -> filter)
+            on_time = {w: records[w] for w in range(W) if mask[w * m] > 0}
+            result = gate.evaluate(t, on_time)
+            gate.advance(t, result)
+            commit = result.commit
+        else:
+            accepted_bits = 0
+            for w in range(W):
+                if mask[w * m] > 0:
+                    accepted_bits |= 1 << w
+            commit = Commit(t, accepted_bits)
+
+        new_residuals = []
+        for w in range(W):
+            if commit.accepted >> w & 1:
+                new_residuals.append(pendings[w])
             else:
                 new_residuals.append(zero_residual(schema))
-        commit = Commit(t, accepted_bits)
         seeds, deltas, cmask, _ = step_arrays(commit, records, schema)
         new_model = apply_step(model, t, seeds, deltas, cmask, records,
                                schema)
         valid = max(float(cmask.sum()), 1.0)
-        loss = sum(records[w].loss * m
+        loss = sum(records[w].loss * float(cmask[w * m:(w + 1) * m].sum())
                    for w in commit.workers(W)) / valid
         if schema.numerics == "int8":
             g = np.abs(np.asarray(deltas, np.float32))
         else:
-            g = np.abs(deltas) / np.float32(2.0 * lane.zo_eps)
+            g = np.abs(np.asarray(deltas, np.float32)) \
+                / np.float32(2.0 * lane.zo_eps)
         metrics = {"loss": jnp.float32(loss),
                    "zo_g": jnp.float32(float(np.sum(g)) / (W * m))}
+        step.commits.append(commit)
         return TrainState({"model": new_model, "residual": new_residuals},
                           state.step + 1, state.seed), metrics
 
+    step.commits = []   # derived Commit stream, for test cross-checks
     return step
 
 

@@ -145,6 +145,11 @@ def step_arrays(commit: Commit, records: Dict[int, Record],
     reaches the parameters. ``records`` may contain non-accepted entries
     (the reference computes all of them); only committed workers' blocks
     are read.
+
+    v2 commits are routed through the Byzantine-robust filter
+    (fleet/robust.py): the returned arrays are *post-filter*, identical
+    for every participant because the filter is a pure function of
+    (records, accepted mask). v1 commits pass through untouched.
     """
     n, m = schema.n_probes, schema.fleet.probes_per_worker
     seeds = np.zeros((n,), np.uint64)
@@ -157,7 +162,21 @@ def step_arrays(commit: Commit, records: Dict[int, Record],
         seeds[sl] = rec.seeds
         deltas[sl] = rec.deltas
         mask[sl] = 1.0
+    from . import robust
+    seeds, deltas, mask = robust.apply_commit_filter(
+        seeds, deltas, mask, commit, records, schema)
     return seeds, deltas, mask, records
+
+
+def tail_workers(mask: np.ndarray, records: Dict[int, Record],
+                 m: int) -> List[int]:
+    """Workers whose BP-tail payload enters the update: those whose
+    ENTIRE probe block survived masking. For filter-free commits this is
+    exactly the accepted set (blocks are all-or-nothing); under the
+    robust filter a worker with any rejected probe is distrusted wholesale
+    — its tail is dropped along with the rejected scalars."""
+    return sorted(w for w in records
+                  if np.all(np.asarray(mask[w * m:(w + 1) * m]) > 0))
 
 
 def ledger_step_arrays(ledger: Ledger, step: int, schema: ReplaySchema):
@@ -201,7 +220,7 @@ def apply_step(params, step: int, seeds: np.ndarray, deltas: np.ndarray,
     new_zo = schema.engine.apply_zo_records(zo_part, seeds[None, :],
                                             coeffs[None, :])
     m = schema.fleet.probes_per_worker
-    accepted = sorted(w for w in records if mask[w * m] > 0)
+    accepted = tail_workers(mask, records, m)
     new_bp = _apply_tail(bp_part, step, records, accepted, valid, schema)
     return elastic.merge(new_zo, new_bp)
 
@@ -219,7 +238,8 @@ def replay(params, ledger: Ledger, schema: ReplaySchema,
         return params
     per_step, scalar = [], []
     for step in range(lo, hi):
-        assert step in ledger.commits, f"ledger gap at step {step}"
+        if step not in ledger.commits:
+            raise ValueError(f"ledger gap at step {step}")
         arrays = ledger_step_arrays(ledger, step, schema)
         per_step.append(arrays)
         scalar.append(step_coeffs(schema, step, arrays[1], arrays[2]))
@@ -229,7 +249,7 @@ def replay(params, ledger: Ledger, schema: ReplaySchema,
     new_zo = schema.engine.apply_zo_records(zo_part, seeds, all_coeffs)
     m = schema.fleet.probes_per_worker
     for i, (_, _, mk, records) in enumerate(per_step):
-        accepted = sorted(w for w in records if mk[w * m] > 0)
+        accepted = tail_workers(mk, records, m)
         bp_part = _apply_tail(bp_part, lo + i, records, accepted,
                               scalar[i][1], schema)
     return elastic.merge(new_zo, bp_part)

@@ -6,8 +6,10 @@ reproducible fixture: tests/test_fleet.py replays the realized probe
 masks through the single-process reference and asserts the parameter
 streams are bit-identical.
 
-Per step: alive workers compute records -> chaos transport delivers (or
-not, or late) -> coordinator commits -> commit+records broadcast -> every
+Per step: alive workers compute records -> Byzantine workers tamper
+their wire copy (fleet/adversary.py, deterministic) -> chaos transport
+delivers (or not, or late) -> coordinator gates (validation, quarantine,
+robust filter) and commits -> commit+records broadcast -> every
 participant applies the canonical update. Crashed workers rejoin by
 ledger replay (fleet/worker.py restart), never by copying the full
 model.
@@ -24,6 +26,7 @@ import jax
 
 from ..configs.base import LaneConfig
 from ..configs.fleet import FleetConfig
+from .adversary import build_adversaries
 from .coordinator import Coordinator
 from .ledger import Ledger
 from .replay import ReplaySchema, make_schema
@@ -36,9 +39,13 @@ class FleetResult:
     coordinator: Coordinator
     workers: List[Worker]
     schema: ReplaySchema
-    masks: List[np.ndarray]            # realized per-step probe masks
+    masks: List[np.ndarray]            # realized per-step COMMIT probe masks
     param_trace: List[Any]             # canon after each step (host copies)
     stats: Dict[str, Any] = field(default_factory=dict)
+    # realized per-step ARRIVAL probe masks (pre-gate: which records made
+    # the deadline) — what drives the Byzantine reference, which then
+    # re-derives validation/quarantine/filter itself (fleet/reference.py)
+    arrival_masks: List[np.ndarray] = field(default_factory=list)
 
     @property
     def ledger(self) -> Ledger:
@@ -76,6 +83,8 @@ def run_fleet(loss_fn: Callable, params, lane: LaneConfig,
     workers = [Worker(w, params, schema, probe_fn, quantize_fn, dirs[w])
                for w in range(fleet_cfg.num_workers)]
 
+    adversaries = build_adversaries(fleet_cfg)
+
     crash_at: Dict[int, List[tuple]] = {}
     restart_at: Dict[int, List[int]] = {}
     for w, cs, down in fleet_cfg.crashes:
@@ -102,10 +111,15 @@ def run_fleet(loss_fn: Callable, params, lane: LaneConfig,
             if not worker.alive:
                 continue
             rec = worker.compute_record(step, batch)
+            if worker.id in adversaries:
+                # wire-only tampering: the worker's local state (params,
+                # EF residual) stays honest, like a compromised uplink
+                rec = adversaries[worker.id].tamper(rec, step)
             fate = transport.fate(step, worker.id)
             transport.send(rec, fate)
             arrivals.append((rec, fate))
-        assert arrivals, "crash schedule left the fleet empty"
+        if not arrivals:
+            raise ValueError("crash schedule left the fleet empty")
         commit, records = coordinator.close_step(step, arrivals)
         bytes_broadcast += commit.nbytes \
             + sum(r.nbytes for r in records.values())
@@ -126,6 +140,7 @@ def run_fleet(loss_fn: Callable, params, lane: LaneConfig,
                   f"{fleet_cfg.num_workers}", flush=True)
 
     led = coordinator.ledger
+    quarantine_events = coordinator.gate.quarantine_events()
     stats = {
         "steps": steps,
         "workers": fleet_cfg.num_workers,
@@ -138,6 +153,18 @@ def run_fleet(loss_fn: Callable, params, lane: LaneConfig,
         "n_dropped": transport.n_dropped,
         "n_straggled": transport.n_straggled,
         "n_catchups": n_catchups,
+        "n_rejected": coordinator.n_rejected,
+        "n_filtered_probes": coordinator.n_filtered,
+        "n_quarantines": sum(1 for *_, kind in quarantine_events
+                             if kind == "enter"),
     }
+    arrival_masks = []
+    m = fleet_cfg.probes_per_worker
+    for bits in coordinator.arrival_history:
+        am = np.zeros((schema.n_probes,), np.float32)
+        for w in range(fleet_cfg.num_workers):
+            if bits >> w & 1:
+                am[w * m:(w + 1) * m] = 1.0
+        arrival_masks.append(am)
     return FleetResult(coordinator, workers, schema, masks, param_trace,
-                       stats)
+                       stats, arrival_masks)

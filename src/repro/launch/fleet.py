@@ -16,6 +16,13 @@ paper's LeNet-5 on deterministic glyphs, integer-only updates, 9-byte
 ledger probes (record v2, docs/fleet.md), the same chaos matrix — and
 additionally self-verifies the whole run bit-exact against the
 single-process int8 reference (fleet/reference.py) before exiting.
+
+``--byzantine 3:sign_flip,5:inflate:100`` puts deterministic attackers
+on the named workers (fleet/adversary.py: inflate, sign_flip, freeload,
+collude, seed_lie, stale_replay); ``--robust`` arms the Byzantine-robust
+commit filter + quarantine (fleet/robust.py, commit v2 on the wire).
+The int8 self-verification covers the Byzantine path too: the reference
+re-derives every filter verdict from the realized arrival masks.
 """
 from __future__ import annotations
 
@@ -27,11 +34,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..configs import FleetConfig, LaneConfig, ShapeConfig, get_arch, reduced
+from ..configs import (FleetConfig, LaneConfig, RobustConfig, ShapeConfig,
+                       get_arch, reduced)
 from ..core import api
 from ..data.synthetic import token_batch
 from ..fleet import (make_int8_probe_fn, make_reference_step,
-                     reference_state, run_fleet)
+                     parse_byzantine, reference_state, run_fleet)
 from ..sharding.rules import ShardingRules
 from ..train.train_loop import LoopConfig, run
 
@@ -110,6 +118,19 @@ def main(argv=None):
     ap.add_argument("--crash", default="",
                     help="worker:step:down triples, comma-separated, e.g. "
                          "'3:5:4' = worker 3 dies at step 5 for 4 steps")
+    ap.add_argument("--byzantine", default="",
+                    help="worker:attack[:amp] triples, comma-separated, "
+                         "e.g. '3:sign_flip,5:inflate:100' "
+                         "(fleet/adversary.py)")
+    ap.add_argument("--robust", action="store_true",
+                    help="arm the Byzantine-robust commit filter + "
+                         "quarantine (fleet/robust.py; commit v2)")
+    ap.add_argument("--robust-k-mad", type=float, default=6.0,
+                    help="scalar filter band half-width, in MADs")
+    ap.add_argument("--robust-mode", default="mask",
+                    choices=["mask", "clip"],
+                    help="reject out-of-band probes, or clip their "
+                         "loss-diffs to the band")
     ap.add_argument("--no-verify-reference", action="store_true",
                     help="skip the single-process reference re-run "
                          "(int8 lane verifies it by default)")
@@ -117,11 +138,22 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     crashes = _parse_crashes(ap, args)
-    fleet_cfg = FleetConfig(
-        num_workers=args.workers, probes_per_worker=args.probes_per_worker,
-        dropout=args.dropout, max_delay=args.max_delay,
-        deadline=args.deadline, chaos_seed=args.chaos_seed,
-        snapshot_every=args.snapshot_every, crashes=crashes)
+    try:
+        byzantine = parse_byzantine(args.byzantine)
+    except ValueError as e:
+        ap.error(str(e))
+    robust = RobustConfig(mode=args.robust_mode,
+                          k_mad=args.robust_k_mad) if args.robust else None
+    try:
+        fleet_cfg = FleetConfig(
+            num_workers=args.workers,
+            probes_per_worker=args.probes_per_worker,
+            dropout=args.dropout, max_delay=args.max_delay,
+            deadline=args.deadline, chaos_seed=args.chaos_seed,
+            snapshot_every=args.snapshot_every, crashes=crashes,
+            byzantine=byzantine, robust=robust)
+    except ValueError as e:
+        ap.error(str(e))
 
     loss_fn = None
     probe_fn = None
@@ -167,7 +199,9 @@ def main(argv=None):
     base_seed = jax.random.key_data(jax.random.key(args.seed + 1))
     print(f"[fleet] {desc}: {args.workers} workers x "
           f"{args.probes_per_worker} probes, lane={args.lane}, "
-          f"dropout={args.dropout}, crashes={crashes or 'none'}")
+          f"dropout={args.dropout}, crashes={crashes or 'none'}, "
+          f"byzantine={args.byzantine or 'none'}, "
+          f"robust={'on' if robust else 'off'}")
     res = run_fleet(loss_fn, params, lane, fleet_cfg, batch_fn,
                     steps=args.steps, base_seed=base_seed,
                     partition_fn=partition_fn, probe_fn=probe_fn,
@@ -187,7 +221,9 @@ def main(argv=None):
           f"{some_rec.zo_probe_nbytes}B/probe), tail wire "
           f"{s['ledger_bytes_tail']}B, catch-up {s['bytes_catchup']}B; "
           f"dropped {s['n_dropped']}, straggled {s['n_straggled']}, "
-          f"rejoins {s['n_catchups']}")
+          f"rejoins {s['n_catchups']}; rejected {s['n_rejected']}, "
+          f"filtered probes {s['n_filtered_probes']}, "
+          f"quarantines {s['n_quarantines']}")
 
     failed = False
     if args.lane == "int8" and some_rec.zo_probe_nbytes > 9:
@@ -216,13 +252,17 @@ def main(argv=None):
           f"the coordinator at step {res.coordinator.step}")
 
     if args.lane == "int8" and not args.no_verify_reference:
-        # replay the realized commit masks through the single-process
-        # reference — the whole chaos run must reproduce bit-exactly
+        # replay the realized masks through the single-process reference
+        # — the whole chaos run must reproduce bit-exactly. Byzantine
+        # runs are driven by the ARRIVAL masks; the reference re-derives
+        # validation, quarantine, and the filter itself.
+        byz_path = byzantine or robust is not None
+        drive = res.arrival_masks if byz_path else res.masks
         step_fn = make_reference_step(None, res.schema, probe_fn=probe_fn)
         state = reference_state(params, res.schema, base_seed)
         loop = LoopConfig(total_steps=args.steps, log_every=0,
                           n_probes=res.schema.n_probes,
-                          mask_fn=lambda t: res.masks[t], jit=False)
+                          mask_fn=lambda t: drive[t], jit=False)
         state, _ = run(step_fn, state, batch_fn, loop)
         ref_leaves = jax.tree.leaves(state.params["model"])
         ok = all(jnp.array_equal(a, b)

@@ -1,0 +1,255 @@
+"""Byzantine chaos matrix: 8 workers x {fp32, int8} x every adversary.
+
+For each attack model in fleet/adversary.py, in both numerics lanes,
+under transport chaos (dropout + stragglers):
+
+  (a) the robust-filtered fleet's canonical parameter stream is
+      bit-exact vs the filtered single-process reference, which
+      re-derives every validation/quarantine/filter verdict itself from
+      the realized arrival masks — including the Commit v2 stream;
+  (b) the filtered run's final loss stays within tolerance of the
+      attack-free run (the attack is *neutralized*, not just survived);
+  (c) the unfiltered attacked run demonstrably diverges from the
+      attack-free canon — and, for the statistical attacks, from the
+      filtered run too — proving the filter does real work.
+
+Marked ``chaos``: CI runs this matrix in a dedicated job (once also
+under PYTHONOPTIMIZE=1 — the gate must be assert-free).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ByzantineSpec, FleetConfig, LaneConfig,
+                           RobustConfig, ShapeConfig, get_arch, reduced)
+from repro.core import api
+from repro.core.int8 import quant_from_float
+from repro.data.synthetic import glyphs, token_batch
+from repro.fleet import (make_int8_probe_fn, make_probe_fn,
+                         make_reference_step, reference_state, run_fleet)
+from repro.fleet.adversary import ATTACKS
+from repro.models import lenet
+from repro.sharding.rules import ShardingRules
+from repro.train.train_loop import LoopConfig, run
+
+pytestmark = pytest.mark.chaos
+
+WORKERS = 8
+STEPS = 5
+ROBUST = RobustConfig(window=3, quarantine_after=2, quarantine_steps=2)
+# statistical attacks are caught by the scalar/loss filter; protocol
+# attacks are caught by validation (which is on even without robust)
+STATISTICAL = ("inflate", "sign_flip", "freeload", "collude")
+PROTOCOL = ("seed_lie", "stale_replay")
+# workers 2 and 4 are on time every step under the chaos params below
+# (the attack must actually land for the divergence assertions to bite)
+ATTACKER = 4
+CLIQUE = (2, 4)
+
+
+def specs_for(attack):
+    if attack == "collude":
+        return tuple(ByzantineSpec(w, "collude") for w in CLIQUE)
+    return (ByzantineSpec(ATTACKER, attack),)
+
+
+def test_matrix_covers_every_adversary():
+    """The matrix below must enumerate fleet/adversary.py exactly."""
+    assert set(STATISTICAL) | set(PROTOCOL) == set(ATTACKS)
+
+
+def fleet_cfg(byzantine=(), robust=None):
+    # chaos params chosen so every step keeps an honest MAJORITY on time
+    # (>= 5 of 8 under chaos_seed=3) while still exercising drops and
+    # stragglers — with <= 2 sound records the filter has no majority to
+    # lean on, by design (docs/fleet.md, residual risks)
+    return FleetConfig(num_workers=WORKERS, probes_per_worker=1,
+                       dropout=0.1, max_delay=3, deadline=2,
+                       chaos_seed=3, snapshot_every=4,
+                       byzantine=byzantine, robust=robust)
+
+
+def _bitwise_equal(a, b):
+    return all(jnp.array_equal(x, y)
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ------------------------------------------------------------------ #
+# lane environments (one jitted probe_fn each, shared by every run)
+# ------------------------------------------------------------------ #
+
+
+@pytest.fixture(scope="module")
+def fp32env():
+    cfg = reduced(get_arch("llama3-8b"), num_layers=2, d_model=32,
+                  num_heads=2, num_kv_heads=2, head_dim=16, d_ff=64,
+                  vocab_size=128)
+    lane = LaneConfig(lane="elastic_zo", bp_tail_layers=1,
+                      learning_rate=5e-2, zo_eps=1e-3)
+    shape = ShapeConfig("t", seq_len=16, global_batch=2, kind="train")
+    model = api.build(cfg, shape, lane, ShardingRules(None, cfg, shape))
+    params = model.init(jax.random.key(0))
+
+    def batch_fn(step):
+        x, y, m = token_batch(2, 16, cfg.vocab_size, seed=1, step=step)
+        return {"tokens": jnp.asarray(x), "labels": jnp.asarray(y),
+                "mask": jnp.asarray(m)}
+
+    # tolerance calibration: removing the attacker's probes changes the
+    # (5-step) trajectory by a few percent — a real attack landing
+    # unfiltered moves the loss by far more than 12%
+    env = dict(lane=lane, params=params, batch_fn=batch_fn,
+               partition_fn=None,
+               probe_fn=make_probe_fn(model.loss_fn, lane),
+               base_seed=jax.random.key_data(jax.random.key(1)),
+               loss_tol=0.12)
+    env["free"] = _run(env, (), None)
+    return env
+
+
+@pytest.fixture(scope="module")
+def int8env():
+    lane = LaneConfig(lane="elastic_zo_int8", zo_num_probes=1)
+    part = lambda p: lenet.partition_at(p, 4)  # noqa: E731
+
+    def batch_fn(step):
+        xs, ys = glyphs(8, seed=1, start=step * 8)
+        return {"x": quant_from_float(jnp.asarray(xs)),
+                "y": jnp.asarray(ys)}
+
+    env = dict(lane=lane, params=lenet.init_lenet5_int8(jax.random.key(0)),
+               batch_fn=batch_fn, partition_fn=part,
+               probe_fn=make_int8_probe_fn(lenet.lenet5_forward_int8, lane,
+                                           part, [("fc3", "fc3_in")]),
+               base_seed=jax.random.key_data(jax.random.key(1)),
+               loss_tol=0.25)
+    env["free"] = _run(env, (), None)
+    return env
+
+
+def _run(env, byzantine, robust):
+    return run_fleet(None, env["params"], env["lane"],
+                     fleet_cfg(byzantine, robust), env["batch_fn"],
+                     steps=STEPS, base_seed=env["base_seed"],
+                     partition_fn=env["partition_fn"],
+                     probe_fn=env["probe_fn"], trace=True)
+
+
+def _reference_trace(env, res):
+    """Drive the single-process reference with the realized arrival
+    masks; it re-derives every gate verdict itself."""
+    step_fn = make_reference_step(None, res.schema,
+                                  probe_fn=env["probe_fn"])
+    state = reference_state(env["params"], res.schema, env["base_seed"])
+    trace = []
+
+    def recording_step(s, batch, mask):
+        s2, metrics = step_fn(s, batch, mask)
+        trace.append(jax.tree.map(np.asarray, s2.params["model"]))
+        return s2, metrics
+
+    loop = LoopConfig(total_steps=STEPS, log_every=0,
+                      n_probes=res.schema.n_probes,
+                      mask_fn=lambda t: res.arrival_masks[t], jit=False)
+    run(recording_step, state, env["batch_fn"], loop)
+    return trace, step_fn.commits
+
+
+def _assert_matrix_case(env, attack):
+    specs = specs_for(attack)
+    filt = _run(env, specs, ROBUST)
+    unfilt = _run(env, specs, None)
+    free = env["free"]
+
+    # (a) bit-exact vs the filtered single-process reference, at every
+    # step, including the derived Commit v2 stream
+    trace, commits = _reference_trace(env, filt)
+    assert len(trace) == STEPS == len(filt.param_trace)
+    for t, (a, b) in enumerate(zip(filt.param_trace, trace)):
+        assert _bitwise_equal(a, b), f"{attack}: diverged at step {t}"
+    for t in range(STEPS):
+        ca, cb = filt.ledger.commits[t], commits[t]
+        assert (ca.step, ca.accepted, ca.quarantined, ca.filtered) == \
+            (cb.step, cb.accepted, cb.quarantined, cb.filtered), \
+            f"{attack}: commit diverged at step {t}"
+
+    # (b) the filtered run's final loss is within tolerance of the
+    # attack-free run: the attack is neutralized
+    l_free = free.coordinator.loss_history[-1][1]
+    l_filt = filt.coordinator.loss_history[-1][1]
+    tol = max(env["loss_tol"] * abs(l_free), env["loss_tol"])
+    assert abs(l_filt - l_free) <= tol, \
+        f"{attack}: filtered loss {l_filt:.4f} vs free {l_free:.4f}"
+
+    # (c) the unfiltered run demonstrably diverges from the attack-free
+    # canon — the attack has teeth...
+    assert not _bitwise_equal(unfilt.params, free.params), \
+        f"{attack}: unfiltered attacked run == attack-free run"
+    if attack in STATISTICAL:
+        # ...and the filter did real work: it masked probes, and either
+        # the filtered canon differs from the unfiltered one (the attack
+        # had a parameter channel) or the loss metric was protected.
+        # The int8 freeloader is the parameter-neutral case: a masked
+        # int8 probe with g=0 is the same exact no-op as an unmasked
+        # one, so only the fabricated loss needs filtering.
+        assert filt.stats["n_filtered_probes"] > 0, attack
+        params_changed = not _bitwise_equal(filt.params, unfilt.params)
+        l_unfilt = unfilt.coordinator.loss_history[-1][1]
+        metric_protected = abs(l_unfilt - l_free) > tol \
+            and abs(l_filt - l_free) <= tol
+        assert params_changed or metric_protected, \
+            f"{attack}: filter changed neither params nor the metric"
+    else:
+        # protocol attacks: validation rejects in BOTH runs — the liar
+        # never lands a record after its honest step-0 stash
+        ok_from = 1 if attack == "stale_replay" else 0
+        for res in (filt, unfilt):
+            for t in range(ok_from, STEPS):
+                assert not res.ledger.commits[t].accepted >> ATTACKER & 1, \
+                    f"{attack}: liar committed at step {t}"
+        assert unfilt.stats["n_rejected"] > 0
+    return filt
+
+
+@pytest.mark.parametrize("attack", ATTACKS)
+def test_fp32_chaos_matrix(fp32env, attack):
+    _assert_matrix_case(fp32env, attack)
+
+
+@pytest.mark.parametrize("attack", ATTACKS)
+def test_int8_chaos_matrix(int8env, attack):
+    _assert_matrix_case(int8env, attack)
+
+
+def test_fp32_no_false_positives(fp32env):
+    """Attack-free + robust filter on: no honest probe is ever filtered
+    and the canon is bit-identical to the filter-free run (the filter
+    pays for itself only when someone lies)."""
+    res = _run(fp32env, (), ROBUST)
+    assert res.stats["n_filtered_probes"] == 0
+    assert res.stats["n_quarantines"] == 0
+    assert _bitwise_equal(res.params, fp32env["free"].params)
+    # wire form: commits are v2 with all-ones bits
+    for c in res.ledger.commits.values():
+        assert c.version == 2 and c.inband(res.schema.n_probes).all()
+
+
+def test_int8_no_false_positives(int8env):
+    res = _run(int8env, (), ROBUST)
+    assert res.stats["n_filtered_probes"] == 0
+    assert res.stats["n_quarantines"] == 0
+    assert _bitwise_equal(res.params, int8env["free"].params)
+
+
+def test_quarantine_fires_in_matrix(fp32env):
+    """A persistent inflate attacker lands in quarantine (commit v2
+    carries the set) and the fleet keeps training without it."""
+    res = _run(fp32env, (ByzantineSpec(ATTACKER, "inflate"),), ROBUST)
+    assert res.stats["n_quarantines"] >= 1
+    quar = [t for t, c in res.ledger.commits.items()
+            if c.quarantined >> ATTACKER & 1]
+    assert quar, "quarantine never recorded in a commit"
+    for t in quar:
+        assert not res.ledger.commits[t].accepted >> ATTACKER & 1

@@ -1,0 +1,553 @@
+"""fleet/robust.py invariants: filter purity, quarantine, gate edges.
+
+The robust filter's load-bearing property is that it is a **pure
+function of (records, accepted mask)** — permutation-invariant in
+worker order, idempotent (fixpoint), and identical no matter which
+participant computes it (coordinator gate, reference gate, replay
+recompute, wire-roundtripped commit). A deterministic battery here pins
+those invariants on hand-picked nasty cases;
+tests/test_robust_properties.py turns hypothesis loose on the same
+assertions. The rest of the module covers the quarantine state machine,
+coordinator snapshot/pruning edges, and the seed-liar regression (a
+lying worker must be *rejected*, never crash the fleet — including
+under ``python -O``, where the old ``assert`` vanished).
+
+Protocol-level tests here run on a **toy fleet**: a hand-written
+probe_fn over a 1-leaf parameter tree, no model, no jit — the wire
+protocol, gate, and replay machinery are exactly the production code
+paths, at interactive speed.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ByzantineSpec, FleetConfig, LaneConfig, RobustConfig
+from repro.fleet import (Commit, Ledger, QuarantineTracker, RobustGate,
+                         filter_decision, make_replay_fn, make_schema,
+                         probe_seeds, replay, run_fleet, step_arrays)
+from repro.fleet.ledger import pack_bits, unpack_bits
+from repro.fleet.robust import apply_decision
+
+W = 6          # toy fleet width for the protocol tests
+BASE_SEED = jax.random.key_data(jax.random.key(7))
+
+
+# ------------------------------------------------------------------ #
+# toy fleet: production protocol, no model
+# ------------------------------------------------------------------ #
+
+
+def toy_partition(p):
+    return p, {}
+
+
+def toy_probe_fn(params, batch, step, ids, base_seed):
+    """Deterministic stand-in for the jitted probe eval: loss pairs are
+    a pure function of (params, step, probe id), tail empty."""
+    ids = jnp.asarray(ids, jnp.float32)
+    s = jnp.sum(jnp.asarray(params["w"], jnp.float32))
+    lp = 2.0 + s + 0.01 * (jnp.asarray(step, jnp.float32) + 1.0) \
+        + 0.003 * ids
+    lm = 2.0 + s - 0.01 * (jnp.asarray(step, jnp.float32) + 1.0) \
+        + 0.002 * ids
+    return lp, lm, {}
+
+
+def toy_fleet_cfg(**kw):
+    kw.setdefault("num_workers", W)
+    kw.setdefault("probes_per_worker", 1)
+    kw.setdefault("snapshot_every", 2)
+    return FleetConfig(**kw)
+
+
+def toy_schema(fleet_cfg=None, numerics="fp32"):
+    if fleet_cfg is None:
+        fleet_cfg = toy_fleet_cfg(robust=RobustConfig())
+    if numerics == "int8":
+        from repro.core.int8 import QTensor
+        lane = LaneConfig(lane="elastic_zo_int8", zo_num_probes=1)
+        params = {"w": QTensor(jnp.zeros((8,), jnp.int8), jnp.int32(0))}
+    else:
+        lane = LaneConfig(lane="elastic_zo", learning_rate=1e-2,
+                          zo_eps=1e-3)
+        params = {"w": jnp.zeros((8,), jnp.float32)}
+    return params, lane, make_schema(params, lane, fleet_cfg, BASE_SEED,
+                                     toy_partition)
+
+
+def toy_records(schema, step, deltas, losses):
+    """Well-formed wire records with correct seed schedules."""
+    from repro.fleet import Record
+    m = schema.fleet.probes_per_worker
+    seeds = probe_seeds(schema, step)
+    recs = {}
+    for w in range(schema.fleet.num_workers):
+        d = np.asarray(deltas[w * m:(w + 1) * m])
+        d = d.astype(np.int8 if schema.numerics == "int8" else np.float32)
+        recs[w] = Record(step=step, worker=w,
+                         seeds=seeds[w * m:(w + 1) * m].copy(),
+                         deltas=d, loss=float(losses[w]),
+                         numerics=schema.numerics)
+    return recs
+
+
+def run_toy_fleet(fleet_cfg, steps=6, trace=False):
+    params, lane, _ = toy_schema(fleet_cfg)
+    return params, run_fleet(None, params, lane, fleet_cfg,
+                             lambda t: {}, steps=steps,
+                             base_seed=BASE_SEED,
+                             partition_fn=toy_partition,
+                             probe_fn=toy_probe_fn, trace=trace)
+
+
+def _bitwise_equal(a, b):
+    return all(jnp.array_equal(x, y)
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ------------------------------------------------------------------ #
+# deterministic battery: the filter is a pure function of (records,
+# mask) — tests/test_robust_properties.py fuzzes the same invariants
+# ------------------------------------------------------------------ #
+
+# (deltas, losses, accept-bits) — hand-picked nasty cases: clean, one
+# inflated, identical values (MAD=0), clique of two, huge-but-finite
+# magnitudes (f32 overflow in the group means), freeloader loss, sparse
+# acceptance, all-accepted-all-weird
+CASES = [
+    ([0.01, -0.02, 0.015, -0.005, 0.02, 0.0], [2.0] * 6, 0b111111),
+    ([0.01, -0.02, 0.015, 5000.0, 0.02, 0.0], [2.0] * 6, 0b111111),
+    ([0.5] * 6, [2.0] * 6, 0b111111),
+    ([0.01, -0.02, 700.0, 700.0, 0.02, 0.0], [2.0] * 6, 0b111111),
+    ([3e38, -3e38, 0.01, -0.02, 0.0, 0.015], [2.0] * 6, 0b111111),
+    ([0.01, -0.02, 0.015, -0.005, 0.02, 0.0],
+     [2.0, 2.01, 0.0, 1.99, 2.02, 2.0], 0b111111),
+    ([0.01, -0.02, 0.015, -0.005, 0.02, 9.9], [2.0] * 6, 0b000011),
+    ([1e30, -1e30, 1e-30, 42.0, -7.7, 3.3],
+     [0.0, 50.0, 2.0, 2.0, 93.0, 2.0], 0b101101),
+]
+TERN_CASES = [
+    ([1, -1, 0, 1, -1, 0], [2.0] * 6, 0b111111),
+    ([1, -1, 64, 1, -3, 0], [2.0] * 6, 0b111111),
+    ([127, -127, 2, -2, 1, 0], [2.0, 2.0, 0.0, 2.0, 2.0, 2.0], 0b110111),
+]
+
+
+def _expand_mask(bits):
+    return np.asarray([float(bits >> w & 1) for w in range(W)], np.float32)
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("mode", ["mask", "clip"])
+def test_filter_pure_and_permutation_invariant_fp32(case, mode):
+    """Same inputs -> same verdict; relabeling the workers permutes the
+    verdict with them (the filter sees a value multiset, not an order)."""
+    deltas, losses, bits = case
+    cfg = RobustConfig(mode=mode)
+    d = np.asarray(deltas, np.float32)
+    l = np.asarray(losses, np.float32)
+    mask = _expand_mask(bits)
+    a = filter_decision(d, l, mask, 1, cfg, "fp32")
+    b = filter_decision(d.copy(), l.copy(), mask.copy(), 1, cfg, "fp32")
+    assert np.array_equal(a.inband, b.inband)       # pure
+    assert (a.outliers, a.loss_reject) == (b.outliers, b.loss_reject)
+    perm = np.roll(np.arange(W), 2)
+    p = filter_decision(d[perm], l[perm], mask[perm], 1, cfg, "fp32")
+    assert np.array_equal(p.inband, a.inband[perm])  # equivariant
+    for w in range(W):
+        assert (p.loss_reject >> w & 1) == (a.loss_reject >> perm[w] & 1)
+
+
+@pytest.mark.parametrize("case", TERN_CASES)
+def test_filter_pure_and_permutation_invariant_int8(case):
+    deltas, losses, bits = case
+    cfg = RobustConfig()
+    d = np.asarray(deltas, np.int8)
+    l = np.asarray(losses, np.float32)
+    mask = _expand_mask(bits)
+    a = filter_decision(d, l, mask, 1, cfg, "int8")
+    # ternary validity is per-probe and order-free
+    perm = np.roll(np.arange(W), 3)
+    p = filter_decision(d[perm], l[perm], mask[perm], 1, cfg, "int8")
+    assert np.array_equal(p.inband, a.inband[perm])
+    # sign-consistency: every accepted non-ternary scalar is rejected
+    for i in range(W):
+        if mask[i] > 0 and abs(int(np.asarray(deltas)[i])) > 1:
+            assert not a.inband[i]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_filter_idempotent_mask_mode(case):
+    """Filtering filtered arrays is a no-op: the verdict is a joint
+    fixpoint of the loss and scalar channels."""
+    deltas, losses, bits = case
+    cfg = RobustConfig()
+    d = np.asarray(deltas, np.float32)
+    l = np.asarray(losses, np.float32)
+    mask = _expand_mask(bits)
+    dec = filter_decision(d, l, mask, 1, cfg, "fp32")
+    seeds = np.arange(W, dtype=np.uint64)
+    _, d2, m2 = apply_decision(seeds, d, mask, dec, cfg, 1)
+    dec2 = filter_decision(d2, l, m2, 1, cfg, "fp32")
+    _, d3, m3 = apply_decision(seeds, d2, m2, dec2, cfg, 1)
+    assert np.array_equal(d2, d3) and np.array_equal(m2, m3)
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_filter_identical_across_gate_replay_and_wire_fp32(case):
+    """Coordinator gate, replay recompute (step_arrays), and the
+    wire-roundtripped commit all derive the same post-filter arrays."""
+    deltas, losses, bits = case
+    _run_cross_path(np.asarray(deltas, np.float32),
+                    np.asarray(losses, np.float32), bits, "fp32")
+
+
+@pytest.mark.parametrize("case", TERN_CASES)
+def test_filter_identical_across_gate_replay_and_wire_int8(case):
+    deltas, losses, bits = case
+    _run_cross_path(np.asarray(deltas, np.int8),
+                    np.asarray(losses, np.float32), bits, "int8")
+
+
+def _run_cross_path(deltas, losses, bits, numerics):
+    _, _, schema = toy_schema(
+        toy_fleet_cfg(robust=RobustConfig()), numerics)
+    recs = toy_records(schema, 0, deltas, losses)
+    on_time = {w: recs[w] for w in range(W) if bits >> w & 1}
+    gate = RobustGate(schema)
+    result = gate.evaluate(0, on_time)
+    # the gate's carried bits == direct recomputation from the ledger view
+    s1, d1, m1, _ = step_arrays(result.commit, result.records, schema)
+    led = Ledger()
+    for w in sorted(result.records):
+        led.append_record(result.records[w])
+    led.append_commit(result.commit)
+    led2 = Ledger.from_bytes(led.to_bytes())
+    c2, r2 = led2.step_entries(0)
+    assert c2.filtered == result.commit.filtered
+    s2, d2, m2, _ = step_arrays(c2, r2, schema)
+    assert np.array_equal(m1, m2) and np.array_equal(d1, d2)
+    assert np.array_equal(s1, s2)
+    # evaluate is pure: a second gate derives the same commit
+    again = RobustGate(schema).evaluate(0, on_time)
+    assert (again.commit.accepted, again.commit.filtered) == \
+        (result.commit.accepted, result.commit.filtered)
+
+
+def test_mom_center_breakdown_semantics():
+    """mom_groups=0 is the plain median (50% breakdown); a g-group MoM
+    is corrupted once a clique owns >= g/2 sorted chunks — documented
+    trade-off, pinned here so nobody re-defaults to a small g."""
+    from repro.fleet.robust import mom_center
+    vals = np.asarray([0.01, 0.012, 0.009, 0.011, 700.0, 700.0],
+                      np.float32)
+    assert mom_center(vals, 0) == np.float32(np.median(vals))
+    assert mom_center(vals, 0) < 1.0          # median holds vs 2/6 clique
+    # 4 sorted chunks over 6 values isolate the two 700s into their own
+    # chunks: half the group means are corrupted and the center is
+    # dragged between the honest and clique clusters
+    assert mom_center(vals, 4) > 1.0
+    # permutation-invariant either way
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(6)
+    assert mom_center(vals[perm], 4) == mom_center(vals, 4)
+
+
+# ------------------------------------------------------------------ #
+# commit v2 wire format
+# ------------------------------------------------------------------ #
+
+
+def test_commit_v2_wire_roundtrip_and_v1_compat():
+    bits = pack_bits(np.asarray([1, 0, 1, 1, 0, 1], bool))
+    v2 = Commit(5, 0b101101, quarantined=0b010000, filtered=bits)
+    v1 = Commit(6, 0b111)
+    assert v1.version == 1 and len(v1.to_bytes()) == 9 == v1.nbytes
+    assert v2.version == 2 and len(v2.to_bytes()) == v2.nbytes
+    led = Ledger()
+    led.append_commit(v2)
+    led.append_commit(v1)
+    led2 = Ledger.from_bytes(led.to_bytes())
+    r2, r1 = led2.commits[5], led2.commits[6]
+    assert (r2.accepted, r2.quarantined, r2.filtered) == \
+        (v2.accepted, v2.quarantined, bits)
+    assert np.array_equal(r2.inband(6), [1, 0, 1, 1, 0, 1])
+    # old commits decode as filter-free
+    assert r1.filtered is None and r1.quarantined == 0
+    assert r1.inband(6).all()
+    # append-only invariant raises (not asserts) on duplicate steps
+    with pytest.raises(ValueError, match="append-only"):
+        led2.append_commit(Commit(5, 1))
+    # truncated filter bitmask is rejected, never mis-parsed
+    buf = v2.to_bytes()
+    with pytest.raises(ValueError):
+        Ledger.from_bytes(buf[:-1])
+    assert np.array_equal(unpack_bits(pack_bits(np.ones(9, bool)), 9),
+                          np.ones(9, bool))
+
+
+def test_robust_probe_count_validated_at_construction():
+    """The commit-v2 filter bitmask length is a u8 byte count: a config
+    that could not serialize must fail at construction, not mid-run."""
+    FleetConfig(num_workers=32, probes_per_worker=128)     # fine w/o robust
+    with pytest.raises(ValueError, match="at most 2040 probes"):
+        FleetConfig(num_workers=32, probes_per_worker=128,
+                    robust=RobustConfig())
+
+
+def test_v2_ledger_without_robust_config_refuses_to_replay():
+    """Wire bits alone cannot distinguish mask from clip semantics: a
+    replayer missing the RobustConfig must raise, not silently guess."""
+    _, _, schema = toy_schema()
+    deltas = np.asarray([0.01, -0.02, 0.015, 500.0, 0.0, 0.02], np.float32)
+    recs = toy_records(schema, 0, deltas, np.full(W, 2.0))
+    result = RobustGate(schema).evaluate(0, {w: recs[w] for w in range(W)})
+    _, _, bare = toy_schema(toy_fleet_cfg(robust=None))
+    with pytest.raises(ValueError, match="no RobustConfig"):
+        step_arrays(result.commit, result.records, bare)
+
+
+def test_forged_filter_mask_rejected_on_replay():
+    """A v2 commit whose carried bits contradict the deterministic
+    recomputation is a corrupt/forged ledger -> ValueError."""
+    _, _, schema = toy_schema()
+    deltas = np.asarray([0.01, -0.02, 0.015, 500.0, 0.0, 0.02], np.float32)
+    recs = toy_records(schema, 0, deltas, np.full(W, 2.0))
+    gate = RobustGate(schema)
+    result = gate.evaluate(0, {w: recs[w] for w in range(W)})
+    assert not result.commit.inband(W)[3]         # the outlier is caught
+    forged = Commit(0, result.commit.accepted,
+                    quarantined=result.commit.quarantined,
+                    filtered=pack_bits(np.ones(W, bool)))
+    with pytest.raises(ValueError, match="does not match"):
+        step_arrays(forged, result.records, schema)
+
+
+# ------------------------------------------------------------------ #
+# quarantine state machine
+# ------------------------------------------------------------------ #
+
+
+def test_quarantine_enter_exit_and_window():
+    cfg = RobustConfig(window=3, quarantine_after=2, quarantine_steps=2)
+    t = QuarantineTracker(cfg, 4)
+    t.observe(0, 0b0010)
+    assert t.active_bits(1) == 0
+    t.observe(1, 0b0010)                 # 2 verdicts in window -> enter
+    assert t.active_bits(2) == 0b0010 and t.active_bits(3) == 0b0010
+    t.observe(2, 0)
+    t.observe(3, 0)
+    assert t.active_bits(4) == 0         # released after quarantine_steps
+    assert (2, 1, "enter") in t.events
+    # verdicts outside the sliding window don't accumulate
+    t2 = QuarantineTracker(cfg, 4)
+    t2.observe(0, 0b1)
+    t2.observe(1, 0)
+    t2.observe(2, 0)
+    t2.observe(3, 0b1)                   # step-0 verdict aged out
+    assert t2.active_bits(4) == 0
+
+
+def test_quarantine_never_empties_the_fleet():
+    cfg = RobustConfig(window=1, quarantine_after=1, quarantine_steps=0)
+    t = QuarantineTracker(cfg, 2)
+    t.observe(0, 0b11)                   # everyone looks like an outlier
+    assert bin(t.active_bits(1)).count("1") == 1
+    # permanent quarantine (quarantine_steps=0) never exits
+    t.observe(1, 0)
+    t.observe(2, 0)
+    assert bin(t.active_bits(3)).count("1") == 1
+
+
+def test_quarantined_worker_excluded_then_readmitted():
+    """Fleet-level: a persistent outlier is quarantined (commit v2
+    carries the set), sits out, and is readmitted after the timer."""
+    cfg = toy_fleet_cfg(
+        byzantine=(ByzantineSpec(2, "inflate"),),
+        robust=RobustConfig(window=2, quarantine_after=2,
+                            quarantine_steps=2))
+    _, res = run_toy_fleet(cfg, steps=8)
+    quar_steps = [t for t, c in res.ledger.commits.items()
+                  if c.quarantined >> 2 & 1]
+    assert quar_steps, "attacker never quarantined"
+    for t in quar_steps:
+        assert not res.ledger.commits[t].accepted >> 2 & 1
+    # readmitted (as accepted-but-filtered) after the quarantine lapses
+    assert any(c.accepted >> 2 & 1 for c in res.ledger.commits.values())
+    assert res.stats["n_quarantines"] >= 1
+
+
+# ------------------------------------------------------------------ #
+# seed-schedule liars: reject, don't crash (the PR 4 regression)
+# ------------------------------------------------------------------ #
+
+
+def test_seed_liar_rejected_not_fatal():
+    """A worker publishing a diverged seed schedule is rejected from
+    every commit and cannot poison or crash the fleet."""
+    cfg = toy_fleet_cfg(byzantine=(ByzantineSpec(1, "seed_lie"),))
+    params, res = run_toy_fleet(cfg, steps=5)
+    for c in res.ledger.commits.values():
+        assert not c.accepted >> 1 & 1, "liar entered a commit"
+    assert res.stats["n_rejected"] == 5
+    assert any("seed schedule diverged" in e for e in res.coordinator.events)
+    # the canon is exactly the attack-free canon minus the liar's probes:
+    # replaying the ledger from scratch reproduces it
+    rejoined = make_replay_fn(res.schema)(params, res.ledger.to_bytes(),
+                                          0, 5)
+    assert _bitwise_equal(rejoined, res.params)
+
+
+def test_stale_replayer_rejected():
+    cfg = toy_fleet_cfg(byzantine=(ByzantineSpec(4, "stale_replay"),))
+    _, res = run_toy_fleet(cfg, steps=5)
+    # step 0's record is honest (nothing to replay yet), all others stale
+    assert res.ledger.commits[0].accepted >> 4 & 1
+    for t in range(1, 5):
+        assert not res.ledger.commits[t].accepted >> 4 & 1
+    assert any("stale/foreign step" in e for e in res.coordinator.events)
+
+
+def test_stale_replayer_survives_crash_gap():
+    """A crash gap that swallows the replay target must not crash the
+    adversary (it falls back to the newest record it actually has), and
+    the fleet/reference adversary stashes stay aligned because the
+    reference skips stashing on the worker's down steps."""
+    cfg = toy_fleet_cfg(byzantine=(ByzantineSpec(4, "stale_replay"),),
+                        crashes=((4, 2, 3),), snapshot_every=2)
+    _, res = run_toy_fleet(cfg, steps=8)
+    # rejoined at 5; its step-5 wire record replays stash[3] -> but 3
+    # fell in the gap, so the newest held is step 1 -> stale, rejected
+    assert res.workers[4].alive
+    assert not res.ledger.commits[5].accepted >> 4 & 1
+    # and a worker crashed from step 0 has nothing at all to replay: the
+    # honest fallback goes out (and is accepted)
+    cfg0 = toy_fleet_cfg(byzantine=(ByzantineSpec(3, "stale_replay"),),
+                         crashes=((3, 0, 2),), snapshot_every=2)
+    _, res0 = run_toy_fleet(cfg0, steps=5)
+    assert res0.ledger.commits[2].accepted >> 3 & 1
+
+
+def test_seed_liar_rejected_under_python_O(tmp_path):
+    """The old coordinator died on `assert` when a worker lied about its
+    seed schedule — which also means `python -O` removed the check
+    entirely. The rejection path must be assert-free."""
+    script = tmp_path / "liar.py"
+    src_dir = os.path.join(os.path.dirname(__file__), "..", "src")
+    test_dir = os.path.dirname(__file__)
+    script.write_text(
+        "import sys\n"
+        f"sys.path.insert(0, {src_dir!r})\n"
+        f"sys.path.insert(0, {test_dir!r})\n"
+        "assert not __debug__, 'this regression must run under -O'\n"
+        "from repro.configs import ByzantineSpec\n"
+        "from test_fleet_robust import run_toy_fleet, toy_fleet_cfg\n"
+        "cfg = toy_fleet_cfg(byzantine=(ByzantineSpec(1, 'seed_lie'),))\n"
+        "_, res = run_toy_fleet(cfg, steps=3)\n"
+        "assert True  # stripped; use exceptions below\n"
+        "if any(c.accepted >> 1 & 1 for c in res.ledger.commits.values()):\n"
+        "    raise SystemExit('liar entered a commit under -O')\n"
+        "if res.stats['n_rejected'] != 3:\n"
+        "    raise SystemExit('rejections not counted under -O')\n"
+        "print('OK-rejected-under-O')\n")
+    env = {**os.environ, "PYTHONOPTIMIZE": "1", "JAX_PLATFORMS": "cpu"}
+    out = subprocess.run([sys.executable, str(script)], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr
+    assert "OK-rejected-under-O" in out.stdout
+
+
+# ------------------------------------------------------------------ #
+# coordinator snapshot pruning / nearest_snapshot edges
+# ------------------------------------------------------------------ #
+
+
+def test_snapshot_pruning_keep_one_and_nearest_edges():
+    cfg = toy_fleet_cfg(snapshot_every=2)
+    params, lane, schema = toy_schema(cfg)
+    from repro.fleet import Coordinator
+    from repro.fleet.transport import Fate
+    coord = Coordinator(params, schema, keep_snapshots=1)
+    for t in range(6):
+        recs = toy_records(
+            schema, t, 0.01 * np.arange(1, W + 1, dtype=np.float32),
+            np.full(W, 2.0))
+        arrivals = [(recs[w], Fate(True, 0)) for w in range(W)]
+        coord.close_step(t, arrivals)
+    # keep_snapshots=1: only the newest snapshot survives (step 0 pruned)
+    assert sorted(coord.snapshots) == [6]
+    base, snap = coord.nearest_snapshot(6)
+    assert base == 6 and _bitwise_equal(snap, coord.params)
+    # restoring exactly at a pruned base is a clear error, not max([])
+    with pytest.raises(ValueError, match="no snapshot at or before"):
+        coord.nearest_snapshot(5)
+    # replay from the retained snapshot is the identity at its own step
+    assert _bitwise_equal(
+        replay(snap, coord.ledger, schema, 6, 6), coord.params)
+
+
+def test_out_of_order_close_step_raises():
+    params, lane, schema = toy_schema(toy_fleet_cfg())
+    from repro.fleet import Coordinator
+    from repro.fleet.transport import Fate
+    coord = Coordinator(params, schema)
+    recs = toy_records(schema, 1, np.zeros(W, np.float32),
+                       np.full(W, 2.0))
+    with pytest.raises(ValueError, match="out of order"):
+        coord.close_step(1, [(recs[0], Fate(True, 0))])
+    with pytest.raises(ValueError, match="out of order"):
+        coord.close_step(0, [])
+
+
+def test_quarantined_worker_rejoins_via_ledger_replay():
+    """Crash a Byzantine worker mid-quarantine: it restarts from the
+    coordinator snapshot + a v2-commit ledger slice and lands bit-exact
+    on the canon (quarantine state rides in the commits, not in any
+    worker-side state)."""
+    cfg = toy_fleet_cfg(
+        byzantine=(ByzantineSpec(2, "collude"),),
+        robust=RobustConfig(window=2, quarantine_after=2,
+                            quarantine_steps=3),
+        crashes=((2, 3, 2),), snapshot_every=3)
+    _, res = run_toy_fleet(cfg, steps=8)
+    assert res.stats["n_catchups"] == 1
+    assert res.stats["n_quarantines"] >= 1
+    w2 = res.workers[2]
+    assert w2.alive and w2.catchup_bytes > 0
+    for w in res.workers:
+        assert _bitwise_equal(w.params, res.params), f"worker {w.id}"
+
+
+def test_empty_commit_is_a_noop_step():
+    """If no sound record exists for a step, the commit is empty and the
+    canonical update is an exact parameter no-op."""
+    _, _, schema = toy_schema(toy_fleet_cfg())
+    from repro.fleet import Coordinator
+    from repro.fleet.transport import Fate
+    coord = Coordinator(toy_schema(toy_fleet_cfg())[0], schema)
+    before = jax.tree.map(np.asarray, coord.params)
+    recs = toy_records(schema, 0, np.zeros(W, np.float32),
+                       np.full(W, 2.0))
+    bad = recs[0]
+    bad.seeds = bad.seeds + np.uint64(1)         # only arrival lies
+    commit, _ = coord.close_step(0, [(bad, Fate(True, 0))])
+    assert commit.accepted == 0
+    assert _bitwise_equal(before, coord.params)
+    assert any("empty commit" in e for e in coord.events)
+    # a no-op step is not an observation: no fictitious 0.0 in the curve
+    assert np.isnan(coord.loss_history[0][1])
+    recs2 = toy_records(schema, 1, np.zeros(W, np.float32),
+                        np.full(W, 2.0))
+    coord.close_step(1, [(recs2[w], Fate(True, 0)) for w in range(W)])
+    bad2 = recs2[0]
+    # (records are stashed per step; reuse a stale one as the sole
+    # arrival for step 2 -> rejected -> empty commit carries prev loss)
+    commit2, _ = coord.close_step(2, [(bad2, Fate(True, 0))])
+    assert commit2.accepted == 0
+    assert coord.loss_history[2][1] == coord.loss_history[1][1]

@@ -1,0 +1,103 @@
+"""Hypothesis property tests for the Byzantine-robust filter.
+
+The invariant under test (docs/design.md §11): ``filter_decision`` is a
+pure function of (records, accepted mask) — permutation-invariant in
+worker order, idempotent under its own application, and identical
+whether derived by the coordinator gate, the replay recompute, or a
+wire-roundtripped commit. tests/test_fleet_robust.py pins the same
+assertions on a deterministic battery (and runs without hypothesis);
+this module turns property-based search loose on them.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: suite must collect without it
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.configs import RobustConfig  # noqa: E402
+from repro.fleet import filter_decision  # noqa: E402
+from repro.fleet.robust import apply_decision  # noqa: E402
+
+from test_fleet_robust import W, _expand_mask, _run_cross_path  # noqa: E402
+
+finite32 = st.floats(allow_nan=False, allow_infinity=False, width=32)
+delta_st = st.lists(finite32, min_size=W, max_size=W)
+loss_st = st.lists(st.floats(0.0, 100.0, width=32), min_size=W, max_size=W)
+mask_st = st.integers(1, 2 ** W - 1)
+mode_st = st.sampled_from(["mask", "clip"])
+tern_st = st.lists(st.integers(-127, 127), min_size=W, max_size=W)
+perm_st = st.permutations(list(range(W)))
+
+
+@settings(deadline=None, max_examples=60)
+@given(delta_st, loss_st, mask_st, mode_st, perm_st)
+def test_filter_pure_and_permutation_invariant_fp32(deltas, losses, bits,
+                                                    mode, perm):
+    """Same inputs -> same verdict; relabeling the workers permutes the
+    verdict with them (the filter sees a value multiset, not an order)."""
+    cfg = RobustConfig(mode=mode)
+    d = np.asarray(deltas, np.float32)
+    l = np.asarray(losses, np.float32)
+    mask = _expand_mask(bits)
+    a = filter_decision(d, l, mask, 1, cfg, "fp32")
+    b = filter_decision(d.copy(), l.copy(), mask.copy(), 1, cfg, "fp32")
+    assert np.array_equal(a.inband, b.inband)       # pure
+    assert (a.outliers, a.loss_reject) == (b.outliers, b.loss_reject)
+    perm = np.asarray(perm)
+    p = filter_decision(d[perm], l[perm], mask[perm], 1, cfg, "fp32")
+    assert np.array_equal(p.inband, a.inband[perm])  # equivariant
+    for w in range(W):
+        assert (p.loss_reject >> w & 1) == (a.loss_reject >> perm[w] & 1)
+
+
+@settings(deadline=None, max_examples=60)
+@given(tern_st, loss_st, mask_st, perm_st)
+def test_filter_pure_and_permutation_invariant_int8(deltas, losses, bits,
+                                                    perm):
+    cfg = RobustConfig()
+    d = np.asarray(deltas, np.int8)
+    l = np.asarray(losses, np.float32)
+    mask = _expand_mask(bits)
+    a = filter_decision(d, l, mask, 1, cfg, "int8")
+    perm = np.asarray(perm)
+    p = filter_decision(d[perm], l[perm], mask[perm], 1, cfg, "int8")
+    assert np.array_equal(p.inband, a.inband[perm])
+    # sign-consistency: every accepted non-ternary scalar is rejected
+    for i in range(W):
+        if mask[i] > 0 and abs(int(np.asarray(deltas)[i])) > 1:
+            assert not a.inband[i]
+
+
+@settings(deadline=None, max_examples=60)
+@given(delta_st, loss_st, mask_st)
+def test_filter_idempotent_mask_mode(deltas, losses, bits):
+    """Filtering filtered arrays is a no-op: the verdict is a joint
+    fixpoint of the loss and scalar channels."""
+    cfg = RobustConfig()
+    d = np.asarray(deltas, np.float32)
+    l = np.asarray(losses, np.float32)
+    mask = _expand_mask(bits)
+    dec = filter_decision(d, l, mask, 1, cfg, "fp32")
+    seeds = np.arange(W, dtype=np.uint64)
+    _, d2, m2 = apply_decision(seeds, d, mask, dec, cfg, 1)
+    dec2 = filter_decision(d2, l, m2, 1, cfg, "fp32")
+    _, d3, m3 = apply_decision(seeds, d2, m2, dec2, cfg, 1)
+    assert np.array_equal(d2, d3) and np.array_equal(m2, m3)
+
+
+@settings(deadline=None, max_examples=30)
+@given(delta_st, loss_st, mask_st)
+def test_filter_identical_across_gate_replay_and_wire_fp32(deltas, losses,
+                                                           bits):
+    """Coordinator gate, replay recompute (step_arrays), and the
+    wire-roundtripped commit all derive the same post-filter arrays."""
+    _run_cross_path(np.asarray(deltas, np.float32),
+                    np.asarray(losses, np.float32), bits, "fp32")
+
+
+@settings(deadline=None, max_examples=30)
+@given(tern_st, loss_st, mask_st)
+def test_filter_identical_across_gate_replay_and_wire_int8(deltas, losses,
+                                                           bits):
+    _run_cross_path(np.asarray(deltas, np.int8),
+                    np.asarray(losses, np.float32), bits, "int8")

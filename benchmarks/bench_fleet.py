@@ -25,6 +25,12 @@ commit filter (fleet/robust.py), plus the filter's wall-clock overhead
 — the cost of Byzantine tolerance is a handful of host-side scalar
 medians per step.
 
+``--topology gossip`` additionally runs the same chaos fleet
+leaderlessly (fleet/gossip.py) and reports the wire trade: the star
+uplink+broadcast vs the gossip uplink+epidemic-copy bytes per step.
+The commit streams are identical (the commit rule is one pure
+function); only who carries the bytes changes.
+
 On CPU wall-clock measures protocol + engine overhead, not kernel speed;
 the bytes accounting is exact on any backend. ``--fast`` shrinks steps
 for the CI bench-smoke job.
@@ -37,8 +43,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.configs import (FleetConfig, LaneConfig, RobustConfig,
-                           ShapeConfig, get_arch, reduced)
+from repro.configs import (FleetConfig, GossipConfig, LaneConfig,
+                           RobustConfig, ShapeConfig, get_arch, reduced)
 from repro.core import api
 from repro.data.synthetic import token_batch
 from repro.fleet import parse_byzantine, run_fleet
@@ -60,6 +66,8 @@ def summarize(res, steps):
         "zo_bytes_per_probe": some_rec.zo_probe_nbytes,
         "tail_bytes_per_step": s["ledger_bytes_tail"] / steps,
         "uplink_bytes_per_step": s["bytes_uplink"] / steps,
+        "broadcast_bytes_per_step": s["bytes_broadcast"] / steps,
+        "gossip_bytes_per_step": s["bytes_gossip"] / steps,
         "n_dropped": s["n_dropped"],
         "n_straggled": s["n_straggled"],
         "n_rejected": s["n_rejected"],
@@ -113,6 +121,31 @@ def bench_int8(args, fleet_cfg, steps):
     return summarize(res, steps)
 
 
+def bench_gossip(args, chaos, steps, star_metrics, runner, tag):
+    """Leaderless wire trade for one lane: run the same chaos fleet with
+    --topology gossip and compare bytes-on-wire per step against the
+    star run (`star_metrics`, already measured by the main pass)."""
+    gossip = dataclasses.replace(
+        chaos, topology="gossip",
+        gossip=GossipConfig(fanout=args.gossip_fanout,
+                            rounds=args.gossip_rounds))
+    g = runner(gossip)
+    star_wire = star_metrics["uplink_bytes_per_step"] \
+        + star_metrics["broadcast_bytes_per_step"]
+    gossip_wire = g["uplink_bytes_per_step"] + g["gossip_bytes_per_step"]
+    out = {f"gossip_{k}": v for k, v in g.items()}
+    out["gossip_vs_star_wire_ratio"] = gossip_wire / max(star_wire, 1e-9)
+    print(f"# {tag} gossip {args.workers}w: "
+          f"{g['wall_s_per_step']:.3f}s/step, uplink "
+          f"{g['uplink_bytes_per_step']:.0f}B/step + epidemic "
+          f"{g['gossip_bytes_per_step']:.0f}B/step vs star "
+          f"{star_metrics['uplink_bytes_per_step']:.0f}B uplink + "
+          f"{star_metrics['broadcast_bytes_per_step']:.0f}B broadcast "
+          f"(wire x{out['gossip_vs_star_wire_ratio']:.2f}, "
+          f"no coordinator to lose)")
+    return out
+
+
 def bench_byzantine(args, chaos, steps, free_metrics, runner, tag):
     """Accuracy-under-attack + filter overhead for one lane.
 
@@ -156,6 +189,13 @@ def main(argv=None):
                     help="worker:attack[:amp] specs: also benchmark "
                          "accuracy-under-attack and robust-filter "
                          "overhead (fleet/adversary.py, fleet/robust.py)")
+    ap.add_argument("--topology", default="star",
+                    choices=["star", "gossip"],
+                    help="gossip: also run the leaderless fleet "
+                         "(fleet/gossip.py) and record uplink/broadcast "
+                         "vs epidemic bytes against the star run")
+    ap.add_argument("--gossip-fanout", type=int, default=2)
+    ap.add_argument("--gossip-rounds", type=int, default=2)
     ap.add_argument("--fast", action="store_true",
                     help="CI smoke scale (fewer steps, reduced arch)")
     ap.add_argument("--out", default="")
@@ -182,6 +222,11 @@ def main(argv=None):
                 args, chaos, args.steps, fleet,
                 lambda cfg: bench_fp32(setup, cfg, args.steps), "fp32")
             metrics.update({f"fleet_{k}": v for k, v in byz.items()})
+        if args.topology == "gossip":
+            gos = bench_gossip(
+                args, chaos, args.steps, fleet,
+                lambda cfg: bench_fp32(setup, cfg, args.steps), "fp32")
+            metrics.update({f"fleet_{k}": v for k, v in gos.items()})
         floor = args.probes_per_worker * 12
         metrics.update({f"fleet_{k}": v for k, v in fleet.items()})
         metrics.update({f"single_{k}": v for k, v in single.items()})
@@ -201,6 +246,11 @@ def main(argv=None):
                 args, chaos, args.steps, i8,
                 lambda cfg: bench_int8(args, cfg, args.steps), "int8")
             metrics.update({f"int8_fleet_{k}": v for k, v in byz8.items()})
+        if args.topology == "gossip":
+            gos8 = bench_gossip(
+                args, chaos, args.steps, i8,
+                lambda cfg: bench_int8(args, cfg, args.steps), "int8")
+            metrics.update({f"int8_fleet_{k}": v for k, v in gos8.items()})
         floor8 = args.probes_per_worker * 9
         metrics.update({f"int8_fleet_{k}": v for k, v in i8.items()})
         metrics["int8_zo_bytes_floor_per_worker_step"] = floor8
@@ -228,7 +278,7 @@ def main(argv=None):
         "arch": arch_name, "lane": args.lane, "workers": args.workers,
         "probes_per_worker": args.probes_per_worker, "steps": args.steps,
         "batch": args.batch, "seq": args.seq, "dropout": args.dropout,
-        "byzantine": args.byzantine,
+        "byzantine": args.byzantine, "topology": args.topology,
     }, metrics, out=args.out or None)
 
 

@@ -3,7 +3,7 @@ from .base import (ATTN, MAMBA, RWKV, LaneConfig, ModelConfig, ShapeConfig,
                    SHAPES, TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K,
                    pad_to, reduced)
 from .archs import ARCHS
-from .fleet import ByzantineSpec, FleetConfig, RobustConfig
+from .fleet import ByzantineSpec, FleetConfig, GossipConfig, RobustConfig
 from .paper_models import LENET5, POINTNET, POINTNET_SYN, LeNet5Config, PointNetConfig
 from .serve import ServeConfig
 

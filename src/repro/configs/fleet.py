@@ -57,6 +57,54 @@ class RobustConfig:
 
 
 @dataclass(frozen=True)
+class GossipConfig:
+    """Leaderless topology knobs (fleet/gossip.py).
+
+    Epidemic record exchange: each step, every active peer pushes the
+    step-records it holds to ``fanout`` deterministically-chosen peers,
+    ``rounds`` times; an anti-entropy ring sweep then runs the connected
+    component to quiescence, so every peer of a component closes the
+    step from the identical candidate multiset (what makes the
+    leaderless commit bit-identical without consensus). Exchanges are
+    digest-coordinated: a link carries only records the destination
+    lacks (O(1) digest bytes are not modeled).
+
+    ``partitions`` is a deterministic network-split schedule: triples
+    ``(lo_step, hi_step, group_bitmask)`` — during steps [lo, hi) the
+    fleet splits into the group and its complement; no record crosses.
+    The side holding the strict majority of workers (tie: the side
+    containing the highest worker id — the same leaderless tiebreak the
+    commit rule uses) keeps committing; the minority stalls and
+    reconciles by ledger replay at heal (docs/fleet.md, "Leaderless
+    commits"). Windows must not overlap.
+    """
+    fanout: int = 2
+    rounds: int = 2
+    partitions: Tuple[Tuple[int, int, int], ...] = field(default=())
+
+    def __post_init__(self):
+        if self.fanout < 1 or self.rounds < 1:
+            raise ValueError("gossip fanout and rounds must be >= 1")
+        spans = []
+        for lo, hi, group in self.partitions:
+            if lo < 0 or hi <= lo:
+                raise ValueError(f"partition window [{lo}, {hi}) is empty")
+            if group <= 0:
+                raise ValueError("partition group bitmask must be nonzero")
+            spans.append((lo, hi))
+        for (lo, hi), (lo2, hi2) in zip(sorted(spans), sorted(spans)[1:]):
+            if lo2 < hi:
+                raise ValueError("partition windows must not overlap")
+
+    def active_partition(self, step: int) -> Optional[int]:
+        """The group bitmask of the partition covering `step`, if any."""
+        for lo, hi, group in self.partitions:
+            if lo <= step < hi:
+                return group
+        return None
+
+
+@dataclass(frozen=True)
 class ByzantineSpec:
     """One simulated attacker: worker `worker` runs `attack` with
     strength `amp` (0.0 = the attack's lane-dependent default). Attack
@@ -90,6 +138,11 @@ class FleetConfig:
     #    exactly the pre-robust protocol) --
     byzantine: Tuple[ByzantineSpec, ...] = field(default=())
     robust: Optional[RobustConfig] = None
+    # -- topology: "star" (coordinator closes every step) or "gossip"
+    #    (leaderless: epidemic record exchange, every peer closes each
+    #    step via the same deterministic commit rule) --
+    topology: str = "star"
+    gossip: Optional[GossipConfig] = None
 
     @property
     def n_probes(self) -> int:
@@ -120,6 +173,19 @@ class FleetConfig:
             seen.add(spec.worker)
         if len(seen) == self.num_workers and self.num_workers > 1:
             raise ValueError("at least one worker must stay honest")
+        if self.topology not in ("star", "gossip"):
+            raise ValueError(f"topology {self.topology!r} not in "
+                             f"star|gossip")
+        if self.gossip is not None and self.topology != "gossip":
+            raise ValueError("GossipConfig given but topology is "
+                             f"{self.topology!r}")
+        full = (1 << self.num_workers) - 1
+        for lo, hi, group in (self.gossip.partitions
+                              if self.gossip else ()):
+            if group & ~full or group == full:
+                raise ValueError(
+                    f"partition group {group:#x} must name a proper "
+                    f"nonempty subset of the {self.num_workers} workers")
         if self.robust is not None and self.n_probes > 255 * 8:
             # commit v2 stores the per-probe filter bitmask behind a u8
             # byte count: fail at construction, not mid-run serialization

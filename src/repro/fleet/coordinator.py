@@ -1,136 +1,131 @@
-"""Fleet coordinator: gather records, gate them, commit steps, keep the canon.
+"""Fleet coordinator: gather records, close steps, keep the canon.
 
-Per step the coordinator waits ``deadline`` virtual ticks, routes every
-record that made it through the Byzantine-robust gate
-(fleet/robust.py: validation -> quarantine -> scalar/loss filter), and
-closes the step with a Commit whose bitmask IS the probe mask —
-straggler mitigation is the same masking/renormalization the
-single-process loop uses for dropped probes (docs/design.md §8),
-promoted to a wire protocol, and Byzantine mitigation is a refinement
-of the same mask (Commit v2 carries the post-filter probe bits and the
-quarantine set). Validation **rejects, never asserts**: a record with a
-diverged seed schedule, a stale step field, or the wrong numerics tag
-is dropped (and counted toward quarantine) instead of killing the
-fleet — the pre-robust ``assert`` here died under ``python -O`` and let
-one lying worker take everyone down.
+Since PR 5 the coordinator owns nothing protocol-critical: the whole
+deadline-gate -> never-empty fallback -> Byzantine-robust gate ->
+admit-late -> Commit pipeline lives in fleet/commit_rule.py as a pure
+function of (gate state, arrivals), and this class merely invokes it —
+exactly as every leaderless gossip peer (fleet/gossip.py), the
+single-process reference (fleet/reference.py), and cold ledger replay
+do. The star topology is now just the degenerate deployment where one
+node happens to close every step; losing that node is survivable by
+running ``--topology gossip`` instead (docs/fleet.md).
 
-The coordinator keeps the "a step is never empty" liveness rule on a
-best-effort basis: if the deadline passes with no arrivals it waits for
-the earliest delivery, and if the gate rejects everything it admits
-later arrivals one at a time (earliest first). A step where *no* sound
-record exists commits empty — an exact parameter no-op — rather than
-accepting garbage.
+What the coordinator still keeps, per step:
 
-The coordinator also maintains the canonical parameter stream (applying
-exactly the same replay-module update as everyone else), periodic host
-snapshots that serve as replay bases for crashed workers, and the
-append-only ledger that late joiners slice instead of copying
-checkpoints.
+  * the canonical parameter stream (applying exactly the same
+    replay-module update as everyone else),
+  * the append-only ledger that late joiners slice instead of copying
+    checkpoints, and periodic host snapshots as replay bases,
+  * the realized arrival bookkeeping, SPLIT by admission path (the PR 5
+    arrival-mask fix): ``ontime_history`` holds the pre-gate bits of
+    records that made the deadline, ``late_admit_history`` the workers
+    pulled in past it (never-empty fallback + gate-empty admissions).
+    Their union — ``candidate_history`` — is what drives the reference
+    re-derivation; conflating the two under one "on-time" name is what
+    used to mislabel late admissions on gate-empty steps.
+
+Validation **rejects, never asserts**: a record with a diverged seed
+schedule, a stale step field, or the wrong numerics tag is dropped (and
+counted toward quarantine) instead of killing the fleet. A step where
+*no* sound record exists commits empty — an exact parameter no-op —
+rather than accepting garbage. When the never-empty fallback has to
+retry a record the transport dropped, the retry is accounted
+(``ChaosTransport.redeliver``) — commits never contain phantom bytes.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
+from . import commit_rule
 from .ledger import Commit, Ledger, Record
-from .replay import ReplaySchema, apply_step, step_arrays
+from .replay import ReplaySchema, apply_committed
 from .robust import RobustGate
-from .transport import Fate
+from .transport import ChaosTransport, Fate
 
 
 class Coordinator:
     def __init__(self, params, schema: ReplaySchema,
-                 keep_snapshots: int = 2):
+                 keep_snapshots: int = 2,
+                 transport: Optional[ChaosTransport] = None,
+                 at_step: int = 0):
         self.schema = schema
         self.params = params
+        self.transport = transport
         self.ledger = Ledger()
-        self.snapshots: Dict[int, object] = {0: jax.tree.map(np.asarray,
-                                                             params)}
+        self.snapshots: Dict[int, object] = {
+            at_step: jax.tree.map(np.asarray, params)}
         self.keep_snapshots = max(keep_snapshots, 1)
-        self.step = 0
+        self.step = at_step
         self.loss_history: List[Tuple[int, float]] = []
         self.events: List[str] = []
         self.gate = RobustGate(schema)
-        self.arrival_history: List[int] = []   # realized on-time bits/step
-        self.n_rejected = 0                    # validation rejections
-        self.n_filtered = 0                    # filter-masked probes
+        self.ontime_history: List[int] = []      # pre-gate on-time bits/step
+        self.late_admit_history: List[int] = []  # admitted past the deadline
+        self.n_rejected = 0                      # validation rejections
+        self.n_filtered = 0                      # filter-masked probes
+        # the most recent CloseOutcome — leaderless callers account its
+        # ``retried`` record once per step (this closer has no transport)
+        self.last_outcome: Optional[commit_rule.CloseOutcome] = None
+
+    @property
+    def candidate_history(self) -> List[int]:
+        """Realized candidate bits per step (on-time | late-admitted) —
+        the mask stream the single-process reference re-gates from."""
+        return [o | l for o, l in zip(self.ontime_history,
+                                      self.late_admit_history)]
 
     # ---- step protocol ------------------------------------------------- #
     def close_step(self, step: int,
                    arrivals: List[Tuple[Record, Fate]]) -> Tuple[Commit, Dict[int, Record]]:
-        """Deadline-gate the arrivals, filter, commit, advance the canon."""
+        """Close one step via the shared pure pipeline, advance the canon."""
         if step != self.step or not arrivals:
             raise ValueError(f"close_step({step}) out of order "
                              f"(coordinator at {self.step})")
-        deadline = self.schema.fleet.deadline
-        on_time = [(r, f) for r, f in arrivals
-                   if f.arrived_by(deadline)]
-        if not on_time:
-            # nobody made the deadline: wait for the earliest delivery
-            # (or, if the transport dropped everything, the earliest
-            # retry) — a step is never empty for lack of patience.
-            pool = [(r, f) for r, f in arrivals if f.delivered] or arrivals
-            pick = min(pool, key=lambda rf: (rf[1].delay, rf[0].worker))
-            on_time = [pick]
-            self.events.append(f"step {step}: empty deadline, waited for "
-                               f"worker {pick[0].worker}")
-        # late arrivals the gate may pull in if it rejects everything,
-        # earliest-delivery first (deterministic)
-        on_time_ids = {id(r) for r, _ in on_time}
-        late = sorted(((r, f) for r, f in arrivals
-                       if id(r) not in on_time_ids and f.delivered),
-                      key=lambda rf: (rf[1].delay, rf[0].worker))
-        candidates = {rec.worker: rec for rec, _ in on_time}
-        result = self.gate.evaluate(step, candidates)
-        while result.commit.accepted == 0 and late:
-            rec, _ = late.pop(0)
-            if rec.worker in candidates:
-                continue
-            candidates[rec.worker] = rec
-            self.events.append(f"step {step}: gate empty, admitted late "
-                               f"worker {rec.worker}")
-            result = self.gate.evaluate(step, candidates)
-        self.gate.advance(step, result)
-        self.arrival_history.append(
-            sum(1 << w for w in candidates))
-        for w, reason in result.rejected:
+        outcome = commit_rule.close_step(self.gate, step, arrivals)
+        self.last_outcome = outcome
+        if outcome.retried is not None and self.transport is not None:
+            self.transport.redeliver(outcome.retried)
+        self.gate.advance(step, outcome)
+        self.record_outcome(step, outcome)
+        commit, records = outcome.commit, outcome.records
+        cstep = commit_rule.committed_arrays(commit, records, self.schema)
+        self.account_filtered(cstep)
+        self.params = apply_committed(self.params, step, cstep, self.schema)
+        prev = self.loss_history[-1][1] if self.loss_history else None
+        self.loss_history.append(
+            (step, commit_rule.step_loss(cstep, self.schema, prev)))
+        self.step = step + 1
+        self.maybe_snapshot()
+        return commit, records
+
+    # ---- bookkeeping shared with gossip peers --------------------------- #
+    def record_outcome(self, step: int, outcome: commit_rule.CloseOutcome):
+        """Histories, events, rejection counters, ledger appends."""
+        self.ontime_history.append(outcome.ontime_bits)
+        self.late_admit_history.append(outcome.late_admit_bits)
+        self.events.extend(outcome.events)
+        for _, reason in outcome.rejected:
             self.n_rejected += reason != "quarantined"
-            self.events.append(f"step {step}: rejected worker {w} "
-                               f"({reason})")
         for s, w, kind in self.gate.quarantine_events():
             tag = f"step {s}: worker {w} quarantine {kind}"
             if tag not in self.events:
                 self.events.append(tag)
-        commit, records = result.commit, result.records
-        if commit.accepted == 0:
-            self.events.append(f"step {step}: no sound record survived "
-                               f"the gate — empty commit (no-op step)")
-        for w in sorted(records):
-            self.ledger.append_record(records[w])
-        self.ledger.append_commit(commit)
+        for w in sorted(outcome.records):
+            self.ledger.append_record(outcome.records[w])
+        self.ledger.append_commit(outcome.commit)
 
-        seeds, deltas, mask, _ = step_arrays(commit, records, self.schema)
+    def account_filtered(self, cstep: commit_rule.CommittedStep):
         m = self.schema.fleet.probes_per_worker
         self.n_filtered += int(sum(
-            m - mask[w * m:(w + 1) * m].sum()
-            for w in commit.workers(self.schema.fleet.num_workers)))
-        self.params = apply_step(self.params, step, seeds, deltas, mask,
-                                 records, self.schema)
-        if mask.sum() > 0:
-            loss = sum(records[w].loss
-                       * float(mask[w * m:(w + 1) * m].sum())
-                       for w in records) / float(mask.sum())
-        else:
-            # no-op step (everything rejected/filtered): no observation —
-            # carry the last loss instead of recording a fictitious 0.0
-            loss = self.loss_history[-1][1] if self.loss_history \
-                else float("nan")
-        self.loss_history.append((step, loss))
-        self.step = step + 1
+            m - cstep.mask[w * m:(w + 1) * m].sum()
+            for w in cstep.commit.workers(self.schema.fleet.num_workers)))
+
+    def maybe_snapshot(self):
         if self.schema.fleet.snapshot_every and \
                 self.step % self.schema.fleet.snapshot_every == 0:
             self.snapshots[self.step] = jax.tree.map(np.asarray, self.params)
@@ -138,7 +133,6 @@ class Coordinator:
             # snapshot); don't hold every historical parameter image
             for s in sorted(self.snapshots)[:-self.keep_snapshots]:
                 del self.snapshots[s]
-        return commit, records
 
     # ---- catch-up service ---------------------------------------------- #
     def template(self):

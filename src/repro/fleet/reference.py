@@ -19,11 +19,14 @@ Two driving modes, selected by the schema:
     probe_mask fed by LoopConfig.mask_fn is the *realized commit mask*
     of a fleet run — the pre-robust contract, unchanged.
   * Byzantine (robust config and/or byzantine specs present): the
-    probe_mask is the *realized arrival mask* (FleetResult.
-    arrival_masks — which records made the deadline, before any
-    verdict); the reference re-derives validation, quarantine, and the
-    scalar/loss filter itself through its own RobustGate, and must land
-    on the bit-identical Commit (v2) and parameter stream.
+    probe_mask is the *realized candidate mask* (FleetResult.
+    arrival_masks — on-time arrivals plus late admissions, before any
+    gate verdict); the reference re-derives validation, quarantine, and
+    the scalar/loss filter itself through the verbatim commit-rule
+    pipeline (fleet/commit_rule.py) and its own RobustGate, and must
+    land on the bit-identical Commit (v2) and parameter stream — no
+    matter which topology (star coordinator or leaderless gossip
+    peers) produced the masks.
 
 It is a host-side composite (run it with LoopConfig(jit=False)): jitting
 the whole step would re-fuse the shared sub-programs and shift the fp32
@@ -48,8 +51,9 @@ import jax.numpy as jnp
 from ..configs.base import LaneConfig
 from ..core.elastic import TrainState
 from .adversary import Adversary, build_adversaries
+from .commit_rule import close_candidates, committed_arrays, step_loss
 from .ledger import Commit
-from .replay import ReplaySchema, apply_step, probe_seeds, step_arrays
+from .replay import ReplaySchema, apply_committed, probe_seeds
 from .robust import RobustGate
 from .worker import (compute_record, make_probe_fn, make_quantize_fn,
                      zero_residual)
@@ -107,12 +111,15 @@ def make_reference_step(loss_fn: Callable, schema: ReplaySchema,
             pendings[w] = pending
 
         if byzantine_path:
-            # probe_mask = realized ARRIVAL mask: gate exactly like the
-            # coordinator (validation -> quarantine -> filter)
-            on_time = {w: records[w] for w in range(W) if mask[w * m] > 0}
-            result = gate.evaluate(t, on_time)
-            gate.advance(t, result)
-            commit = result.commit
+            # probe_mask = realized CANDIDATE mask (on-time | late-
+            # admitted): close exactly like any leaderless closer — the
+            # verbatim commit_rule pipeline (validation -> quarantine ->
+            # filter), which over an all-on-time candidate set is the
+            # coordinator's final gate verdict
+            candidates = {w: records[w] for w in range(W) if mask[w * m] > 0}
+            outcome = close_candidates(gate, t, candidates)
+            gate.advance(t, outcome)
+            commit = outcome.commit
         else:
             accepted_bits = 0
             for w in range(W):
@@ -126,16 +133,16 @@ def make_reference_step(loss_fn: Callable, schema: ReplaySchema,
                 new_residuals.append(pendings[w])
             else:
                 new_residuals.append(zero_residual(schema))
-        seeds, deltas, cmask, _ = step_arrays(commit, records, schema)
-        new_model = apply_step(model, t, seeds, deltas, cmask, records,
-                               schema)
-        valid = max(float(cmask.sum()), 1.0)
-        loss = sum(records[w].loss * float(cmask[w * m:(w + 1) * m].sum())
-                   for w in commit.workers(W)) / valid
+        cstep = committed_arrays(commit, records, schema)
+        new_model = apply_committed(model, t, cstep, schema)
+        # the canonical loss observation — a no-op step carries the
+        # previous loss, exactly like every closer's loss_history
+        loss = step_loss(cstep, schema, step.prev_loss)
+        step.prev_loss = loss
         if schema.numerics == "int8":
-            g = np.abs(np.asarray(deltas, np.float32))
+            g = np.abs(np.asarray(cstep.deltas, np.float32))
         else:
-            g = np.abs(np.asarray(deltas, np.float32)) \
+            g = np.abs(np.asarray(cstep.deltas, np.float32)) \
                 / np.float32(2.0 * lane.zo_eps)
         metrics = {"loss": jnp.float32(loss),
                    "zo_g": jnp.float32(float(np.sum(g)) / (W * m))}
@@ -143,7 +150,8 @@ def make_reference_step(loss_fn: Callable, schema: ReplaySchema,
         return TrainState({"model": new_model, "residual": new_residuals},
                           state.step + 1, state.seed), metrics
 
-    step.commits = []   # derived Commit stream, for test cross-checks
+    step.commits = []     # derived Commit stream, for test cross-checks
+    step.prev_loss = None  # carried across steps by step_loss
     return step
 
 

@@ -45,6 +45,7 @@ from ..configs.fleet import FleetConfig
 from ..core import elastic, prng
 from ..core.engine import UpdateEngine, engine_for
 from ..core.int8 import QTensor
+from .commit_rule import CommittedStep, committed_arrays
 from .ledger import Commit, Ledger, Record
 
 
@@ -139,6 +140,8 @@ def step_arrays(commit: Commit, records: Dict[int, Record],
                 schema: ReplaySchema):
     """(seeds u64[n], deltas [n], mask f32[n], records) for one commit.
 
+    Thin compatibility view over commit_rule.committed_arrays — THE
+    commit -> update-inputs derivation every participant shares.
     ``deltas`` is the per-probe wire scalar in the lane dtype (fp32
     loss-diffs, int8 ternary signs). Masked probes carry seed 0 /
     delta 0 — their coefficient is exactly zero, so the seed value never
@@ -151,32 +154,8 @@ def step_arrays(commit: Commit, records: Dict[int, Record],
     for every participant because the filter is a pure function of
     (records, accepted mask). v1 commits pass through untouched.
     """
-    n, m = schema.n_probes, schema.fleet.probes_per_worker
-    seeds = np.zeros((n,), np.uint64)
-    deltas = np.zeros(
-        (n,), np.int8 if schema.numerics == "int8" else np.float32)
-    mask = np.zeros((n,), np.float32)
-    for w in commit.workers(schema.fleet.num_workers):
-        rec = records[w]
-        sl = slice(w * m, (w + 1) * m)
-        seeds[sl] = rec.seeds
-        deltas[sl] = rec.deltas
-        mask[sl] = 1.0
-    from . import robust
-    seeds, deltas, mask = robust.apply_commit_filter(
-        seeds, deltas, mask, commit, records, schema)
-    return seeds, deltas, mask, records
-
-
-def tail_workers(mask: np.ndarray, records: Dict[int, Record],
-                 m: int) -> List[int]:
-    """Workers whose BP-tail payload enters the update: those whose
-    ENTIRE probe block survived masking. For filter-free commits this is
-    exactly the accepted set (blocks are all-or-nothing); under the
-    robust filter a worker with any rejected probe is distrusted wholesale
-    — its tail is dropped along with the rejected scalars."""
-    return sorted(w for w in records
-                  if np.all(np.asarray(mask[w * m:(w + 1) * m]) > 0))
+    cs = committed_arrays(commit, records, schema)
+    return cs.seeds, cs.deltas, cs.mask, records
 
 
 def ledger_step_arrays(ledger: Ledger, step: int, schema: ReplaySchema):
@@ -211,17 +190,21 @@ def _apply_tail(bp_part, step: int, records, accepted: List[int],
     return schema.engine.apply_tail_records(bp_part, step, trees, valid)
 
 
-def apply_step(params, step: int, seeds: np.ndarray, deltas: np.ndarray,
-               mask: np.ndarray, records: Dict[int, Record],
-               schema: ReplaySchema):
-    """One committed step: the canonical params(t) -> params(t+1)."""
+def apply_committed(params, step: int, cstep: CommittedStep,
+                    schema: ReplaySchema):
+    """One committed step: the canonical params(t) -> params(t+1).
+
+    ``cstep`` is commit_rule.committed_arrays' derivation — post-filter
+    arrays plus the tail-eligible worker set (loss-consistency rule),
+    so a worker with one band-rejected ZO probe keeps contributing its
+    sound first-order tail signal (the PR 5 tail fix).
+    """
     zo_part, bp_part = schema.partition_fn(params)
-    coeffs, valid = step_coeffs(schema, step, deltas, mask)
-    new_zo = schema.engine.apply_zo_records(zo_part, seeds[None, :],
+    coeffs, valid = step_coeffs(schema, step, cstep.deltas, cstep.mask)
+    new_zo = schema.engine.apply_zo_records(zo_part, cstep.seeds[None, :],
                                             coeffs[None, :])
-    m = schema.fleet.probes_per_worker
-    accepted = tail_workers(mask, records, m)
-    new_bp = _apply_tail(bp_part, step, records, accepted, valid, schema)
+    new_bp = _apply_tail(bp_part, step, cstep.records,
+                         list(cstep.tail_ws), valid, schema)
     return elastic.merge(new_zo, new_bp)
 
 
@@ -240,18 +223,17 @@ def replay(params, ledger: Ledger, schema: ReplaySchema,
     for step in range(lo, hi):
         if step not in ledger.commits:
             raise ValueError(f"ledger gap at step {step}")
-        arrays = ledger_step_arrays(ledger, step, schema)
-        per_step.append(arrays)
-        scalar.append(step_coeffs(schema, step, arrays[1], arrays[2]))
-    seeds = np.stack([s for s, _, _, _ in per_step])          # [S, n]
+        commit, records = ledger.step_entries(step)
+        cs = committed_arrays(commit, records, schema)
+        per_step.append(cs)
+        scalar.append(step_coeffs(schema, step, cs.deltas, cs.mask))
+    seeds = np.stack([cs.seeds for cs in per_step])           # [S, n]
     all_coeffs = np.stack([c for c, _ in scalar])             # [S, n]
     zo_part, bp_part = schema.partition_fn(params)
     new_zo = schema.engine.apply_zo_records(zo_part, seeds, all_coeffs)
-    m = schema.fleet.probes_per_worker
-    for i, (_, _, mk, records) in enumerate(per_step):
-        accepted = tail_workers(mk, records, m)
-        bp_part = _apply_tail(bp_part, lo + i, records, accepted,
-                              scalar[i][1], schema)
+    for i, cs in enumerate(per_step):
+        bp_part = _apply_tail(bp_part, lo + i, cs.records,
+                              list(cs.tail_ws), scalar[i][1], schema)
     return elastic.merge(new_zo, bp_part)
 
 

@@ -224,44 +224,6 @@ def apply_decision(seeds: np.ndarray, deltas: np.ndarray,
     return seeds, deltas, mask
 
 
-def apply_commit_filter(seeds: np.ndarray, deltas: np.ndarray,
-                        mask: np.ndarray, commit: Commit,
-                        records: Dict[int, Record], schema):
-    """Route one committed step's arrays through the robust filter — the
-    ONE post-filter derivation everybody (coordinator, workers, replay,
-    reference) uses, called from replay.step_arrays.
-
-    v1 / filter-free commits pass through untouched. For v2 commits the
-    verdict is *recomputed* from (records, accepted mask) — the pure
-    function — and cross-checked against the commit's carried bitmask; a
-    mismatch means a corrupt or forged ledger and raises ValueError.
-    A v2 ledger without the RobustConfig that produced it also raises:
-    the wire bits alone cannot distinguish mask from clip semantics, and
-    silently guessing would diverge from the canon (the config is
-    out-of-band enrollment schema, like the tail leaf layout).
-    """
-    if commit.filtered is None:
-        return seeds, deltas, mask
-    n = schema.n_probes
-    m = schema.fleet.probes_per_worker
-    inband = commit.inband(n)
-    cfg = schema.fleet.robust
-    if cfg is None:
-        raise ValueError(
-            f"commit {commit.step} is robust-filtered (v2) but the "
-            f"schema carries no RobustConfig — replaying it without the "
-            f"filter semantics that produced it would diverge")
-    losses = record_losses(records, commit.accepted,
-                           schema.fleet.num_workers)
-    decision = filter_decision(deltas, losses, mask, m, cfg,
-                               schema.numerics)
-    if not np.array_equal(decision.inband, inband):
-        raise ValueError(
-            f"commit {commit.step}: carried filter mask does not match "
-            f"the deterministic recomputation — corrupt or forged ledger")
-    return apply_decision(seeds, deltas, mask, decision, cfg, m)
-
-
 # ------------------------------------------------------------------ #
 # record validation (always on; never an assert)
 # ------------------------------------------------------------------ #
@@ -357,11 +319,14 @@ class GateResult:
 
 
 class RobustGate:
-    """The accept/filter pipeline shared verbatim by the coordinator and
-    the single-process reference (fleet/reference.py), so both derive
-    the same Commit from the same on-time records. ``evaluate`` is pure
-    given the tracker state; ``advance`` consumes one step's verdicts
-    (call it exactly once per step, with the final GateResult)."""
+    """The accept/filter pipeline shared verbatim — via
+    fleet/commit_rule.py — by the star coordinator, every leaderless
+    gossip peer, and the single-process reference (fleet/reference.py),
+    so all of them derive the same Commit from the same candidate
+    records. ``evaluate`` is pure given the tracker state; ``advance``
+    consumes one step's verdicts (call it exactly once per step, with
+    the final GateResult or commit_rule.CloseOutcome — anything carrying
+    ``outliers`` bits)."""
 
     def __init__(self, schema):
         self.schema = schema
@@ -370,7 +335,8 @@ class RobustGate:
             if self.cfg is not None else None
 
     def evaluate(self, step: int, on_time: Dict[int, Record]) -> GateResult:
-        from .replay import probe_seeds, step_arrays   # import cycle guard
+        from .commit_rule import raw_arrays            # import cycle guard
+        from .replay import probe_seeds
         schema = self.schema
         W = schema.fleet.num_workers
         m = schema.fleet.probes_per_worker
@@ -399,7 +365,7 @@ class RobustGate:
         filtered = None
         if self.cfg is not None:
             pre = Commit(step, accepted)
-            _, deltas, mask, _ = step_arrays(pre, valid, schema)
+            _, deltas, mask = raw_arrays(pre, valid, schema)
             losses = record_losses(valid, accepted, W)
             decision = filter_decision(deltas, losses, mask, m, self.cfg,
                                        schema.numerics)

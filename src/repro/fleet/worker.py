@@ -39,9 +39,9 @@ from ..core import elastic, prng, zo
 from ..core.engine import Int8Engine
 from ..train import checkpoint as ckpt
 from ..train.compress import compress_tree
+from .commit_rule import committed_arrays
 from .ledger import Commit, Record
-from .replay import (ReplaySchema, apply_step, probe_seeds, replay,
-                     step_arrays)
+from .replay import ReplaySchema, apply_committed, probe_seeds, replay
 
 
 def make_probe_fn(loss_fn: Callable, lane: LaneConfig, partition_fn=None):
@@ -220,11 +220,18 @@ class Worker:
             self.probe_fn, self.quantize_fn)
         return rec
 
-    def apply_commit(self, step: int, commit: Commit, records):
+    def apply_commit(self, step: int, commit: Commit, records,
+                     new_params=None):
+        """Advance to the committed params. ``new_params`` short-circuits
+        the derivation when the caller already holds the canon for this
+        commit (a gossip peer's closer applied it once already) — the
+        residual/checkpoint protocol below runs either way."""
         assert self.alive and step == self.step
-        seeds, deltas, mask, _ = step_arrays(commit, records, self.schema)
-        self.params = apply_step(self.params, step, seeds, deltas, mask,
-                                 records, self.schema)
+        if new_params is None:
+            cstep = committed_arrays(commit, records, self.schema)
+            new_params = apply_committed(self.params, step, cstep,
+                                         self.schema)
+        self.params = new_params
         accepted = bool(commit.accepted >> self.id & 1)
         self.residual = (self._pending_residual if accepted
                          else zero_residual(self.schema))
@@ -243,21 +250,31 @@ class Worker:
         self.residual = None
         self._pending_residual = None
 
-    def restart(self, coordinator, now_step: int):
+    def restart(self, donor, now_step: int):
         """Catch up to `now_step` by ledger replay, not checkpoint copy.
 
-        Base = own local checkpoint if one exists, else the coordinator's
-        nearest snapshot; then replay the [base, now) ledger slice in one
-        fused pass. Residual restarts at zero — by protocol that is also
-        what the commit history implies (crash steps were not accepted).
+        ``donor`` is any canon keeper with a ``template()``, a
+        ``nearest_snapshot()`` and a ``ledger`` — the star coordinator,
+        or (leaderless topology) any surviving GossipPeer. Base = own
+        local checkpoint if one exists, else the donor's nearest
+        snapshot; then replay the [base, now) ledger slice in one fused
+        pass. Residual restarts at zero — by protocol that is also what
+        the commit history implies (crash steps were not accepted).
+        Returns (base_step, slice_bytes) so leaderless peers can adopt
+        the same slice into their own closing state.
         """
         base_step, base_params = None, None
         if self.ckpt_dir and ckpt.latest_step(self.ckpt_dir) is not None:
             base_params, base_step = ckpt.restore(self.ckpt_dir,
-                                                  coordinator.template())
-        if base_step is None or base_step > now_step:
-            base_step, base_params = coordinator.nearest_snapshot(now_step)
-        slice_bytes = coordinator.ledger.slice_bytes(base_step, now_step)
+                                                  donor.template())
+        # a gossip donor that itself rejoined only holds the ledger from
+        # its own replay base (ledger_since); a local checkpoint older
+        # than that would replay across a gap — take the donor's
+        # snapshot instead (its snapshots never predate its ledger)
+        since = getattr(donor, "ledger_since", 0)
+        if base_step is None or base_step > now_step or base_step < since:
+            base_step, base_params = donor.nearest_snapshot(now_step)
+        slice_bytes = donor.ledger.slice_bytes(base_step, now_step)
         self.catchup_bytes += len(slice_bytes)
         from .ledger import Ledger
         self.params = replay(base_params, Ledger.from_bytes(slice_bytes),
@@ -265,3 +282,4 @@ class Worker:
         self.residual = zero_residual(self.schema)
         self.step = now_step
         self.alive = True
+        return base_step, slice_bytes

@@ -23,6 +23,15 @@ collude, seed_lie, stale_replay); ``--robust`` arms the Byzantine-robust
 commit filter + quarantine (fleet/robust.py, commit v2 on the wire).
 The int8 self-verification covers the Byzantine path too: the reference
 re-derives every filter verdict from the realized arrival masks.
+
+``--topology gossip`` removes the coordinator entirely: peers exchange
+records epidemically (fleet/gossip.py, ``--gossip-fanout`` /
+``--gossip-rounds``) and every peer closes each step independently via
+the deterministic leaderless commit rule — the run exits non-zero
+unless every surviving peer is bit-identical. ``--partition lo:hi:w+w``
+schedules a temporary network split (the listed workers vs the rest);
+the majority side keeps committing, the minority stalls and reconciles
+at heal.
 """
 from __future__ import annotations
 
@@ -34,14 +43,38 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..configs import (FleetConfig, LaneConfig, RobustConfig, ShapeConfig,
-                       get_arch, reduced)
+from ..configs import (FleetConfig, GossipConfig, LaneConfig, RobustConfig,
+                       ShapeConfig, get_arch, reduced)
 from ..core import api
 from ..data.synthetic import token_batch
 from ..fleet import (make_int8_probe_fn, make_reference_step,
                      parse_byzantine, reference_state, run_fleet)
 from ..sharding.rules import ShardingRules
 from ..train.train_loop import LoopConfig, run
+
+
+def _parse_partitions(ap, args):
+    """'lo:hi:w+w+w,...' -> ((lo, hi, group_bitmask), ...)."""
+    parts = []
+    for p in args.partition.split(","):
+        if not p:
+            continue
+        bits = p.split(":")
+        if len(bits) != 3:
+            ap.error(f"--partition entry {p!r} must be lo:hi:w+w+w")
+        try:
+            lo, hi = int(bits[0]), int(bits[1])
+            group = 0
+            for w in bits[2].split("+"):
+                wi = int(w)
+                if not 0 <= wi < args.workers:
+                    ap.error(f"--partition worker {wi} out of range for "
+                             f"--workers {args.workers}")
+                group |= 1 << wi
+        except ValueError:
+            ap.error(f"--partition entry {p!r} must be lo:hi:w+w+w")
+        parts.append((lo, hi, group))
+    return tuple(parts)
 
 
 def _parse_crashes(ap, args):
@@ -131,6 +164,22 @@ def main(argv=None):
                     choices=["mask", "clip"],
                     help="reject out-of-band probes, or clip their "
                          "loss-diffs to the band")
+    ap.add_argument("--topology", default="star",
+                    choices=["star", "gossip"],
+                    help="star: a coordinator closes every step; gossip: "
+                         "leaderless — every peer closes independently "
+                         "via the deterministic commit rule "
+                         "(fleet/gossip.py)")
+    ap.add_argument("--gossip-fanout", type=int, default=2,
+                    help="peers contacted per epidemic push round")
+    ap.add_argument("--gossip-rounds", type=int, default=2,
+                    help="push rounds per step (anti-entropy then runs "
+                         "the component to quiescence)")
+    ap.add_argument("--partition", default="",
+                    help="lo:hi:w+w+w windows, comma-separated: during "
+                         "steps [lo,hi) the listed workers split from "
+                         "the rest; the majority side keeps committing "
+                         "(gossip topology only)")
     ap.add_argument("--no-verify-reference", action="store_true",
                     help="skip the single-process reference re-run "
                          "(int8 lane verifies it by default)")
@@ -144,14 +193,23 @@ def main(argv=None):
         ap.error(str(e))
     robust = RobustConfig(mode=args.robust_mode,
                           k_mad=args.robust_k_mad) if args.robust else None
+    partitions = _parse_partitions(ap, args)
+    if partitions and args.topology != "gossip":
+        ap.error("--partition needs --topology gossip (the star "
+                 "coordinator cannot survive a split)")
     try:
+        gossip = GossipConfig(fanout=args.gossip_fanout,
+                              rounds=args.gossip_rounds,
+                              partitions=partitions) \
+            if args.topology == "gossip" else None
         fleet_cfg = FleetConfig(
             num_workers=args.workers,
             probes_per_worker=args.probes_per_worker,
             dropout=args.dropout, max_delay=args.max_delay,
             deadline=args.deadline, chaos_seed=args.chaos_seed,
             snapshot_every=args.snapshot_every, crashes=crashes,
-            byzantine=byzantine, robust=robust)
+            byzantine=byzantine, robust=robust,
+            topology=args.topology, gossip=gossip)
     except ValueError as e:
         ap.error(str(e))
 
@@ -199,7 +257,9 @@ def main(argv=None):
     base_seed = jax.random.key_data(jax.random.key(args.seed + 1))
     print(f"[fleet] {desc}: {args.workers} workers x "
           f"{args.probes_per_worker} probes, lane={args.lane}, "
-          f"dropout={args.dropout}, crashes={crashes or 'none'}, "
+          f"topology={args.topology}, dropout={args.dropout}, "
+          f"crashes={crashes or 'none'}, "
+          f"partitions={args.partition or 'none'}, "
           f"byzantine={args.byzantine or 'none'}, "
           f"robust={'on' if robust else 'off'}")
     res = run_fleet(loss_fn, params, lane, fleet_cfg, batch_fn,
@@ -221,9 +281,13 @@ def main(argv=None):
           f"{some_rec.zo_probe_nbytes}B/probe), tail wire "
           f"{s['ledger_bytes_tail']}B, catch-up {s['bytes_catchup']}B; "
           f"dropped {s['n_dropped']}, straggled {s['n_straggled']}, "
+          f"redelivered {s['n_redelivered']}, "
           f"rejoins {s['n_catchups']}; rejected {s['n_rejected']}, "
           f"filtered probes {s['n_filtered_probes']}, "
-          f"quarantines {s['n_quarantines']}")
+          f"quarantines {s['n_quarantines']}"
+          + (f"; gossip wire {s['bytes_gossip']}B, "
+             f"reconciles {s['n_reconciles']}"
+             if s["topology"] == "gossip" else ""))
 
     failed = False
     if args.lane == "int8" and some_rec.zo_probe_nbytes > 9:
@@ -248,8 +312,10 @@ def main(argv=None):
             failed = True
         n_exact += ok
         n_checked += 1
+    who = "the coordinator" if args.topology == "star" \
+        else "every other surviving peer (leaderless canon)"
     print(f"[fleet] {n_exact}/{n_checked} live workers bit-exact with "
-          f"the coordinator at step {res.coordinator.step}")
+          f"{who} at step {res.coordinator.step}")
 
     if args.lane == "int8" and not args.no_verify_reference:
         # replay the realized masks through the single-process reference

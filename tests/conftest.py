@@ -4,3 +4,31 @@ import sys
 # Tests see the real single CPU device (the 512-device override is
 # dryrun.py-only by design).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Per-test wall-clock budget: the tier-1 suite is minutes-scale on
+# modest hardware, so a single hung test must fail loudly instead of
+# eating the whole CI job. Applied only when pytest-timeout is
+# installed (CI installs it; a bare local `pip install pytest` run
+# stays green without it). `slow`-marked tests get triple budget; an
+# explicit @pytest.mark.timeout or --timeout always wins.
+_DEFAULT_TIMEOUT = 300
+_SLOW_TIMEOUT = 900
+
+
+def pytest_configure(config):
+    if not config.pluginmanager.hasplugin("timeout"):
+        return
+    # None = not passed; 0 = the plugin's documented "explicitly
+    # disabled" (e.g. stepping through a hang under pdb) — honor it
+    if getattr(config.option, "timeout", None) is None:
+        config.option.timeout = _DEFAULT_TIMEOUT
+
+
+def pytest_collection_modifyitems(config, items):
+    if not config.pluginmanager.hasplugin("timeout"):
+        return
+    import pytest
+    for item in items:
+        if item.get_closest_marker("slow") is not None \
+                and item.get_closest_marker("timeout") is None:
+            item.add_marker(pytest.mark.timeout(_SLOW_TIMEOUT))

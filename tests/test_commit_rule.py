@@ -1,0 +1,234 @@
+"""fleet/commit_rule.py deterministic battery: the extracted close
+pipeline and the PR 5 satellite bugfixes.
+
+  * gate-empty steps: on-time vs late-admitted bits are SPLIT (the old
+    ``arrival_history`` conflated them under an "on-time" docstring);
+  * the never-empty fallback's retry of a transport-dropped record is
+    accounted as a redelivery (no phantom commits that the transport
+    never saw);
+  * the fallback/admit order tiebreak is deterministic: earliest delay,
+    then HIGHEST worker id (the leaderless tiebreak);
+  * tail eligibility follows the loss-consistency channel: a worker
+    with a band-rejected ZO probe keeps its BP-tail contribution, a
+    worker with a lying loss does not.
+
+tests/test_commit_rule_properties.py turns hypothesis loose on the
+order/topology invariances; this module runs without hypothesis.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import FleetConfig, GossipConfig, RobustConfig
+from repro.fleet import (ChaosTransport, Coordinator, RobustGate,
+                         close_candidates, close_step, committed_arrays,
+                         quorum_side)
+from repro.fleet.transport import Fate
+
+from test_fleet_robust import (W, run_toy_fleet, toy_fleet_cfg,
+                               toy_records, toy_schema)
+
+
+def _liar(rec):
+    rec.seeds = np.asarray(rec.seeds, np.uint64) + np.uint64(1)
+    return rec
+
+
+# ------------------------------------------------------------------ #
+# satellite 1: arrival-mask conflation
+# ------------------------------------------------------------------ #
+
+
+def test_gate_empty_step_splits_ontime_from_late_admitted():
+    """A gate-empty step admits a late record: the late admission must
+    land in late_admit_history, NOT be mislabeled as on-time — and the
+    candidate mask (their union) must re-derive the same commit, which
+    is exactly what the reference / launch self-verification does."""
+    cfg = toy_fleet_cfg(deadline=1, max_delay=3)
+    params, _, schema = toy_schema(cfg)
+    coord = Coordinator(params, schema)
+    recs = toy_records(schema, 0, 0.01 * np.arange(1, W + 1,
+                                                   dtype=np.float32),
+                       np.full(W, 2.0))
+    # worker 0 on time but lying (validation rejects it -> gate empty);
+    # worker 3 honest but past the deadline -> pulled in late
+    arrivals = [(_liar(recs[0]), Fate(True, 0)),
+                (recs[3], Fate(True, 3))]
+    commit, _ = coord.close_step(0, arrivals)
+    assert commit.accepted == 0b001000
+    assert coord.ontime_history == [0b000001]
+    assert coord.late_admit_history == [0b001000]
+    assert coord.candidate_history == [0b001001]
+    assert any("gate empty, admitted late worker 3" in e
+               for e in coord.events)
+    # the reference path re-derives the identical commit from the
+    # candidate set alone (validation re-rejects the liar)
+    cand = {0: _liar(toy_records(schema, 0, 0.01 * np.arange(
+        1, W + 1, dtype=np.float32), np.full(W, 2.0))[0]), 3: recs[3]}
+    outcome = close_candidates(RobustGate(schema), 0, cand)
+    assert outcome.commit.to_bytes() == commit.to_bytes()
+
+
+# ------------------------------------------------------------------ #
+# satellite 2: phantom commits bypass transport accounting
+# ------------------------------------------------------------------ #
+
+
+def test_dropped_record_retry_is_accounted():
+    """When the transport drops EVERYTHING, the never-empty fallback
+    retries the earliest record — that retry must pass through the
+    transport's books (bytes + redelivery count), not materialize out
+    of thin air."""
+    cfg = toy_fleet_cfg(deadline=0)
+    params, _, schema = toy_schema(cfg)
+    transport = ChaosTransport(cfg)
+    coord = Coordinator(params, schema, transport=transport)
+    recs = toy_records(schema, 0, 0.01 * np.arange(1, W + 1,
+                                                   dtype=np.float32),
+                       np.full(W, 2.0))
+    arrivals = [(recs[w], Fate(False, w + 1)) for w in range(3)]
+    assert transport.bytes_sent == 0
+    commit, records = coord.close_step(0, arrivals)
+    assert commit.accepted == 0b000001        # earliest retry: worker 0
+    assert transport.n_redelivered == 1
+    assert transport.bytes_sent == recs[0].nbytes
+    assert any("redelivery" in e for e in coord.events)
+
+
+def test_drop_everything_chaos_run_accounts_every_committed_byte():
+    """Chaos pin: under near-total dropout, every committed record's
+    bytes appear in the transport accounting — the steps where the
+    network is worst are exactly the ones that used to be wrong."""
+    cfg = toy_fleet_cfg(dropout=0.9, chaos_seed=13)
+    params, res = run_toy_fleet(cfg, steps=6)
+    transport_check = ChaosTransport(cfg)
+    n_phantom = 0
+    expected_bytes = 0
+    for t, commit in res.ledger.commits.items():
+        for w in commit.workers(W):
+            rec = res.ledger.records[t][w]
+            expected_bytes += rec.nbytes
+            if not transport_check.fate(t, w).delivered:
+                n_phantom += 1
+    assert n_phantom > 0, "chaos never forced a retry; raise dropout"
+    assert res.stats["n_redelivered"] == n_phantom
+    # uplink covers every committed record (delivered or redelivered),
+    # plus delivered-but-uncommitted ones — never less than the commits
+    assert res.stats["bytes_uplink"] >= expected_bytes
+    # topology must not change the books: the same chaos seed closes the
+    # same steps leaderlessly, retrying (and accounting) the same records
+    _, resg = run_toy_fleet(
+        toy_fleet_cfg(dropout=0.9, chaos_seed=13, topology="gossip",
+                      gossip=GossipConfig()), steps=6)
+    assert resg.stats["n_redelivered"] == res.stats["n_redelivered"]
+    assert resg.stats["bytes_uplink"] == res.stats["bytes_uplink"]
+
+
+def test_fallback_tiebreak_highest_worker_id():
+    """Equal delays break toward the HIGHEST worker id — the leaderless
+    tiebreak every peer derives without a coordinator to ask."""
+    cfg = toy_fleet_cfg(deadline=0)
+    params, _, schema = toy_schema(cfg)
+    recs = toy_records(schema, 0, 0.01 * np.arange(1, W + 1,
+                                                   dtype=np.float32),
+                       np.full(W, 2.0))
+    arrivals = [(recs[1], Fate(True, 2)), (recs[4], Fate(True, 2))]
+    outcome = close_step(RobustGate(schema), 0, arrivals)
+    assert outcome.commit.accepted == 0b010000
+    assert outcome.late_admit_bits >> 4 & 1
+
+
+def test_quorum_side_majority_and_tiebreak():
+    assert quorum_side(0b00000011, 8) == 0b11111100     # majority wins
+    assert quorum_side(0b11111100, 8) == 0b11111100
+    # 4-4 tie: the side holding worker 7 wins
+    assert quorum_side(0b11110000, 8) == 0b11110000
+    assert quorum_side(0b00001111, 8) == 0b11110000
+
+
+# ------------------------------------------------------------------ #
+# satellite 3: rejected probe no longer drops the whole tail
+# ------------------------------------------------------------------ #
+
+
+def test_band_rejected_probe_keeps_tail_loss_reject_drops_it():
+    """A worker whose ZO probe is band-rejected but whose loss passed
+    consistency keeps its BP-tail contribution (the sound first-order
+    signal); a worker with an out-of-band loss loses everything."""
+    _, _, schema = toy_schema(toy_fleet_cfg(robust=RobustConfig()))
+    deltas = np.asarray([0.01, -0.02, 0.015, 5000.0, 0.02, 0.0],
+                        np.float32)
+    losses = np.asarray([2.0, 2.01, 1.99, 2.0, 50.0, 2.0], np.float32)
+    recs = toy_records(schema, 0, deltas, losses)
+    result = RobustGate(schema).evaluate(0, {w: recs[w] for w in range(W)})
+    cs = committed_arrays(result.commit, result.records, schema)
+    assert not cs.commit.inband(W)[3], "band outlier not caught"
+    assert cs.mask[3] == 0.0, "band-rejected probe must stay masked"
+    assert 3 in cs.tail_ws, "band-rejected probe dropped the whole tail"
+    assert 4 not in cs.tail_ws, "a lying loss must poison the tail too"
+    assert cs.mask[4] == 0.0
+    # filter-free commits keep the all-or-nothing rule: tail == accepted
+    _, _, bare = toy_schema(toy_fleet_cfg(robust=None))
+    recs2 = toy_records(bare, 0, deltas, np.full(W, 2.0))
+    result2 = RobustGate(bare).evaluate(0, {w: recs2[w] for w in range(W)})
+    cs2 = committed_arrays(result2.commit, result2.records, bare)
+    assert cs2.tail_ws == tuple(range(W))
+
+
+# ------------------------------------------------------------------ #
+# leaderless basics (toy fleet; the full matrix is chaos-marked)
+# ------------------------------------------------------------------ #
+
+
+def test_toy_gossip_matches_star_loss_free():
+    """Star and gossip on a loss-free link produce the identical commit
+    stream and parameters — topology is a deployment choice, not a
+    semantic one."""
+    params, rs = run_toy_fleet(toy_fleet_cfg(), steps=6)
+    _, rg = run_toy_fleet(
+        toy_fleet_cfg(topology="gossip",
+                      gossip=GossipConfig(fanout=2, rounds=1)), steps=6)
+    assert [c.to_bytes() for c in rs.ledger.commits.values()] == \
+        [c.to_bytes() for c in rg.ledger.commits.values()]
+    assert all(jnp.array_equal(a, b) for a, b in
+               zip(jax.tree.leaves(rs.params), jax.tree.leaves(rg.params)))
+    assert rg.stats["bytes_broadcast"] == 0
+
+
+def test_partition_equals_equivalent_crashes_on_the_quorum():
+    """A temporary partition of a minority M over [lo, hi) produces the
+    same commit stream and canon as crashing M for the window: either
+    way the quorum never sees M's records, and both recoveries land on
+    the canon by ledger replay."""
+    lo, hi, minority = 2, 5, (0, 1)
+    group = sum(1 << w for w in minority)
+    part_cfg = toy_fleet_cfg(
+        topology="gossip",
+        gossip=GossipConfig(partitions=((lo, hi, group),)))
+    crash_cfg = toy_fleet_cfg(
+        topology="gossip", gossip=GossipConfig(),
+        crashes=tuple((w, lo, hi - lo) for w in minority))
+    _, rp = run_toy_fleet(part_cfg, steps=8)
+    _, rc = run_toy_fleet(crash_cfg, steps=8)
+    assert [c.to_bytes() for c in rp.ledger.commits.values()] == \
+        [c.to_bytes() for c in rc.ledger.commits.values()]
+    assert all(jnp.array_equal(a, b) for a, b in
+               zip(jax.tree.leaves(rp.params), jax.tree.leaves(rc.params)))
+    assert rp.stats["n_reconciles"] == len(minority)
+    assert rc.stats["n_catchups"] == len(minority)
+
+
+def test_partition_config_validation():
+    with pytest.raises(ValueError, match="overlap"):
+        GossipConfig(partitions=((0, 4, 1), (2, 6, 2)))
+    with pytest.raises(ValueError, match="empty"):
+        GossipConfig(partitions=((4, 4, 1),))
+    with pytest.raises(ValueError, match="proper nonempty subset"):
+        FleetConfig(num_workers=4, topology="gossip",
+                    gossip=GossipConfig(partitions=((0, 2, 0b1111),)))
+    with pytest.raises(ValueError, match="topology"):
+        FleetConfig(num_workers=4, gossip=GossipConfig())
+    with pytest.raises(ValueError, match="star|gossip"):
+        FleetConfig(num_workers=4, topology="ring")

@@ -1,0 +1,116 @@
+"""Hypothesis property tests for the extracted commit rule.
+
+The invariants that make leaderless closing sound (fleet/commit_rule.py,
+docs/fleet.md "Leaderless commits"):
+
+  * **arrival-order invariance** — ``close_step`` sees an arrival
+    multiset, not an order: permuting the arrivals list changes nothing
+    about the Commit, the candidate bits, or the on-time/late split;
+  * **topology invariance** — star and fully-connected gossip on a
+    loss-free link produce identical Commit streams and parameters (the
+    coordinator was never semantically special);
+  * **partition-heal determinism** — a partition schedule is a
+    deterministic fixture: rerunning it reproduces the commit stream
+    and canon bit-for-bit, and every healed peer lands on them.
+
+tests/test_commit_rule.py pins hand-picked cases of the same invariants
+and runs without hypothesis.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: suite must collect without it
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import GossipConfig, RobustConfig  # noqa: E402
+from repro.fleet import RobustGate, close_step  # noqa: E402
+from repro.fleet.transport import Fate  # noqa: E402
+
+from test_fleet_robust import (W, run_toy_fleet, toy_fleet_cfg,  # noqa: E402
+                               toy_records, toy_schema)
+
+finite32 = st.floats(allow_nan=False, allow_infinity=False, width=32)
+delta_st = st.lists(finite32, min_size=W, max_size=W)
+loss_st = st.lists(st.floats(0.0, 100.0, width=32), min_size=W, max_size=W)
+fate_st = st.tuples(st.booleans(), st.integers(0, 4))
+fates_st = st.lists(fate_st, min_size=1, max_size=W)
+perm_st = st.permutations(list(range(W)))
+
+
+def _bitwise_equal(a, b):
+    return all(jnp.array_equal(x, y)
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _outcome_key(o):
+    return (o.commit.to_bytes(), o.ontime_bits, o.late_admit_bits,
+            tuple(sorted(o.records)), o.outliers,
+            None if o.retried is None else o.retried.worker)
+
+
+@settings(deadline=None, max_examples=60)
+@given(delta_st, loss_st, fates_st, perm_st, st.booleans())
+def test_close_step_invariant_to_arrival_order(deltas, losses, fates,
+                                               perm, robust):
+    """Shuffling the arrivals list is a no-op: the pipeline sorts by
+    (delay, highest-id) internally, so every peer — whatever order the
+    mesh delivered records in — closes the identical step."""
+    cfg = toy_fleet_cfg(deadline=1,
+                        robust=RobustConfig() if robust else None)
+    _, _, schema = toy_schema(cfg)
+    recs = toy_records(schema, 0, np.asarray(deltas, np.float32),
+                       np.asarray(losses, np.float32))
+    arrivals = [(recs[w], Fate(d, delay))
+                for w, (d, delay) in enumerate(fates)]
+    a = close_step(RobustGate(schema), 0, arrivals)
+    shuffled = [arrivals[i] for i in perm if i < len(arrivals)]
+    b = close_step(RobustGate(schema), 0, shuffled)
+    assert _outcome_key(a) == _outcome_key(b)
+
+
+@settings(deadline=None, max_examples=8)
+@given(st.integers(0, 2 ** 31 - 1), st.booleans(),
+       st.integers(1, W - 1), st.integers(1, 3))
+def test_star_and_gossip_identical_on_loss_free_link(seed, robust,
+                                                     fanout, rounds):
+    """Topology invariance: with no drops and no delays, a star run and
+    a fully-connected-enough gossip run produce the identical Commit
+    stream and canon — the commit rule is the same pure function."""
+    rob = RobustConfig() if robust else None
+    _, rs = run_toy_fleet(toy_fleet_cfg(chaos_seed=seed, robust=rob),
+                          steps=4)
+    _, rg = run_toy_fleet(
+        toy_fleet_cfg(chaos_seed=seed, robust=rob, topology="gossip",
+                      gossip=GossipConfig(fanout=fanout, rounds=rounds)),
+        steps=4)
+    assert [c.to_bytes() for c in rs.ledger.commits.values()] == \
+        [c.to_bytes() for c in rg.ledger.commits.values()]
+    assert _bitwise_equal(rs.params, rg.params)
+
+
+@settings(deadline=None, max_examples=8)
+@given(st.integers(0, 2 ** 31 - 1),
+       st.integers(1, 3), st.integers(2, 4),
+       st.sets(st.integers(0, W - 1), min_size=1, max_size=W // 2 - 1))
+def test_partition_heal_is_deterministic(seed, lo, width, minority):
+    """Same partition schedule, same chaos seed -> bit-identical commit
+    stream and canon, twice over; every surviving peer agrees."""
+    group = sum(1 << w for w in minority)
+    cfg = toy_fleet_cfg(
+        chaos_seed=seed, dropout=0.2, max_delay=2, deadline=1,
+        topology="gossip",
+        gossip=GossipConfig(partitions=((lo, lo + width, group),)))
+    _, r1 = run_toy_fleet(cfg, steps=lo + width + 2)
+    _, r2 = run_toy_fleet(cfg, steps=lo + width + 2)
+    assert [c.to_bytes() for c in r1.ledger.commits.values()] == \
+        [c.to_bytes() for c in r2.ledger.commits.values()]
+    assert _bitwise_equal(r1.params, r2.params)
+    for p in r1.peers:
+        assert p.alive and _bitwise_equal(p.params, r1.params), p.id
+    # minority probes masked for the whole window
+    for t in range(lo, lo + width):
+        for w in minority:
+            assert r1.masks[t][w] == 0.0

@@ -20,6 +20,9 @@ from repro.sharding.rules import ShardingRules
 from repro.train import checkpoint as ckpt
 from repro.train.train_loop import LoopConfig, run
 
+# minutes-scale integration fixture: full chaos fleet + reference re-run
+pytestmark = pytest.mark.slow
+
 WORKERS = 8
 STEPS = 8
 CRASH = (5, 3, 3)        # worker 5 dies at step 3, rejoins at step 6

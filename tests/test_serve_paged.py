@@ -16,6 +16,9 @@ from repro.kernels.paged_attn import paged_attention
 from repro.serve import Engine, SamplingParams, dense_generate
 from repro.sharding.rules import ShardingRules
 
+# minutes-scale integration suite: dense-vs-paged parity + CLI smoke
+pytestmark = pytest.mark.slow
+
 
 # ------------------------------------------------------------------ #
 # kernel vs oracle (interpret mode)

@@ -43,6 +43,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs import (FleetConfig, GossipConfig, LaneConfig,
                            RobustConfig, ShapeConfig, get_arch, reduced)
 from repro.core import api
@@ -199,7 +200,11 @@ def main(argv=None):
     ap.add_argument("--fast", action="store_true",
                     help="CI smoke scale (fewer steps, reduced arch)")
     ap.add_argument("--out", default="")
+    obs.add_observability_args(ap)
     args = ap.parse_args(argv)
+    obs.configure_from_args(args)
+    if not obs.get().enabled:
+        obs.install()      # BENCH_fleet.json always carries timings
     if args.fast:
         args.smoke = True
         args.steps = min(args.steps, 4)
@@ -280,6 +285,7 @@ def main(argv=None):
         "batch": args.batch, "seq": args.seq, "dropout": args.dropout,
         "byzantine": args.byzantine, "topology": args.topology,
     }, metrics, out=args.out or None)
+    obs.write_outputs(args)
 
 
 if __name__ == "__main__":

@@ -20,6 +20,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.configs import ServeConfig, get_arch, reduced
 from repro.serve import DenseServer, Engine, SamplingParams
 
@@ -40,10 +41,18 @@ def bench_one(cfg, batch: int, prompt_len: int, new_tokens: int,
     eng = Engine(cfg, serve)
     srv = DenseServer(cfg, eng.params, batch, prompt_len, new_tokens)
 
-    # warm both compile caches out of the timed region
+    # warm both compile caches out of the timed region — with the
+    # recorder disarmed, so compile time never pollutes the attribution
     warm = [list(p) for p in prompts]
-    eng.generate(warm, SamplingParams(), new_tokens)
-    srv.generate(prompts)
+    rec = obs.get()
+    if rec.enabled:
+        obs.uninstall()
+    try:
+        eng.generate(warm, SamplingParams(), new_tokens)
+        srv.generate(prompts)
+    finally:
+        if rec.enabled:
+            obs.install(rec)
 
     t0 = time.perf_counter()
     dense = srv.generate(prompts)
@@ -81,7 +90,11 @@ def main(argv=None):
     ap.add_argument("--tokens", type=int, default=8)
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--out", default="")
+    obs.add_observability_args(ap)
     args = ap.parse_args(argv)
+    obs.configure_from_args(args)
+    if not obs.get().enabled:
+        obs.install()      # BENCH_serve.json always carries timings
 
     cfg = get_arch(args.arch)
     if args.smoke:
@@ -100,6 +113,7 @@ def main(argv=None):
         "prompt_len": args.prompt_len, "new_tokens": args.tokens,
         "page_size": args.page_size,
     }, metrics, out=args.out or None)
+    obs.write_outputs(args)
 
 
 if __name__ == "__main__":

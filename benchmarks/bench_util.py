@@ -4,6 +4,12 @@ Every benchmark writes ``BENCH_<name>.json`` at the repo root with the
 schema ``{"name": ..., "config": {...}, "metrics": {...}}`` so the perf
 trajectory is diffable across PRs (one file per benchmark, committed
 runs optional, schema stable). Keep metrics flat: scalar leaves only.
+
+When the process has an armed flight recorder (repro.obs), the document
+additionally carries two attribution sections straight off the recorder
+snapshot — ``"timings"`` (span totals + latency histograms) and
+``"counters"`` (counters + gauges) — so every committed BENCH file also
+says *where* its headline numbers came from.
 """
 from __future__ import annotations
 
@@ -16,6 +22,17 @@ REPO_ROOT = Path(__file__).resolve().parent.parent
 def write_bench(name: str, config: dict, metrics: dict,
                 out: str | None = None) -> Path:
     doc = {"name": name, "config": config, "metrics": metrics}
+    try:
+        from repro import obs
+        rec = obs.get()
+    except ImportError:                    # benchmarks run without src?
+        rec = None
+    if rec is not None and rec.enabled:
+        snap = rec.snapshot()
+        doc["timings"] = {"spans": snap["spans"],
+                          "histograms": snap["histograms"]}
+        doc["counters"] = {"counters": snap["counters"],
+                           "gauges": snap["gauges"]}
     path = Path(out) if out else REPO_ROOT / f"BENCH_{name}.json"
     path.write_text(json.dumps(doc, indent=2) + "\n")
     print(f"# wrote {path}")

@@ -178,19 +178,26 @@ SECTIONS = {
 
 
 def main() -> None:
+    from repro import obs
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--section", choices=sorted(SECTIONS), action="append")
     ap.add_argument("--out", default="")
+    obs.add_observability_args(ap)
     args = ap.parse_args()
+    obs.configure_from_args(args)
+    if not obs.get().enabled:
+        obs.install()      # BENCH_paper.json always carries timings
     ran = []
     metrics = {}
+    rec = obs.get()
     for name, fn in SECTIONS.items():
         if args.section and name not in args.section:
             continue
         t0 = time.perf_counter()
         try:
-            metrics.update(fn(args.fast))
+            with rec.span(f"bench/{name}", track="main"):
+                metrics.update(fn(args.fast))
             ran.append(name)
         except Exception as e:  # noqa: BLE001
             print(f"# [{name}] ERROR {type(e).__name__}: {e}")
@@ -198,6 +205,7 @@ def main() -> None:
         print(f"# [{name}] done in {time.perf_counter()-t0:.1f}s")
     write_bench("paper", {"fast": args.fast, "sections": ",".join(ran)},
                 metrics, out=args.out or None)
+    obs.write_outputs(args)
 
 
 if __name__ == '__main__':

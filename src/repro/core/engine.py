@@ -504,3 +504,113 @@ def engine_for(lane: LaneConfig, partition_fn: Optional[Callable] = None,
     if lane.lane == "elastic_zo_int8":
         return Int8Engine(lane, partition_fn, **kwargs)
     return Fp32Engine(lane, partition_fn, **kwargs)
+
+
+# ------------------------------------------------------------------ #
+# phase profiler (diagnostic path, opt-in)
+# ------------------------------------------------------------------ #
+def profile_step_phases(engine: UpdateEngine, fn: Callable, state, batch,
+                        iters: int = 3) -> Dict[str, float]:
+    """Time the canonical phases one by one; returns {phase: mean_us}.
+
+    This is a *diagnostic* decomposition, deliberately separate from the
+    production train step: the production step is ONE jitted program
+    (host timers cannot see inside it), and re-building it as a chain of
+    separately-jitted phase programs re-fuses differently — FMA
+    contraction shifts the fp32 stream by ~1 ulp (the same reason
+    fleet/reference.py runs under ``LoopConfig(jit=False)``). So the
+    profiler builds its own per-phase programs — the same kernels the
+    real step traces — warms them, and times each with a
+    ``jax.block_until_ready`` device sync. The production step and its
+    numerics are untouched; the parameter state is never written.
+
+    ``fn`` is the lane's step builder argument: ``loss_fn`` for fp32
+    lanes, ``forward`` for int8. Spans land on the "engine" track of the
+    active recorder plus ``engine.phase.<name>_ms`` histograms.
+    """
+    from .. import obs
+    rec = obs.get()
+    lane = engine.lane
+    n = lane.zo_num_probes
+    params = state.params
+    base = jax.random.wrap_key_data(jnp.asarray(state.seed))
+    key = jax.random.fold_in(base, state.step)
+    out: Dict[str, float] = {}
+
+    def timed(name, f, *a):
+        jax.block_until_ready(f(*a))       # compile + warm
+        tot = 0.0
+        for _ in range(iters):
+            with rec.span(f"engine/{name}", track="engine") as sp:
+                t0 = obs.monotonic()
+                jax.block_until_ready(f(*a))
+                tot += obs.monotonic() - t0
+            rec.histogram(f"engine.phase.{name}_ms").observe(sp.dur_ns / 1e6)
+        out[name] = tot / iters * 1e6
+        return out[name]
+
+    timed("partition", lambda p: jax.tree_util.tree_leaves(
+        engine.partition(p)), params)
+    zo_part, bp_part = engine.partition(params)
+
+    if engine.numerics == "int8":
+        loss_fn = None
+        forward = fn
+        seeds = [prng.seed_from_key(jax.random.fold_in(key, i))
+                 for i in range(n)]
+
+        def probe_prog(zp, bp):
+            # loss-diff (the ternary sign) is fused into the probe pair
+            return jnp.stack([engine.probe_pair(forward, zp, bp, batch,
+                                                s)[0] for s in seeds])
+        gs = jax.jit(probe_prog)(zo_part, bp_part)
+        timed("probe", jax.jit(probe_prog), zo_part, bp_part)
+        mask = np.ones((n,), np.float32)
+        timed("coeff", lambda: engine.host_coeffs(
+            int(state.step), np.asarray(gs), mask))
+        terms = [(s, g) for s, g in zip(seeds, gs)]
+        timed("zo_update", jax.jit(
+            lambda zp: jax.tree_util.tree_leaves(engine.zo_apply(zp, terms))),
+            zo_part)
+        if engine.tail_fcs:
+            def tail_prog(bp, zp):
+                g, logits_p, acts_p = engine.probe_pair(forward, zp, bp,
+                                                        batch, seeds[0])
+                upds = engine.tail_updates(bp, acts_p, logits_p, batch["y"])
+                return jax.tree_util.tree_leaves(
+                    engine.tail_apply(bp, engine.combine_tail([upds])))
+            timed("bp_tail", jax.jit(tail_prog), bp_part, zo_part)
+        return out
+
+    loss_fn = fn
+    from .elastic import merge
+    keys = [jax.random.fold_in(key, i) for i in range(n)]
+
+    def probe_prog(zp, bp):
+        ls = []
+        for pk in keys:
+            ls.append(loss_fn(merge(zo.perturb(zp, pk, lane.zo_eps), bp),
+                              batch))
+            ls.append(loss_fn(merge(zo.perturb(zp, pk, -lane.zo_eps), bp),
+                              batch))
+        return jnp.stack(ls)
+    losses = np.asarray(jax.jit(probe_prog)(zo_part, bp_part))
+    timed("probe", jax.jit(probe_prog), zo_part, bp_part)
+    lp, lm = losses[0::2], losses[1::2]
+    timed("loss_diff", lambda: np.float32(lp) - np.float32(lm))
+    deltas = np.float32(lp) - np.float32(lm)
+    mask = np.ones((n,), np.float32)
+    timed("coeff", lambda: engine.host_coeffs(int(state.step), deltas, mask))
+    coeffs, _ = engine.host_coeffs(int(state.step), deltas, mask)
+    terms = [(pk, jnp.float32(c)) for pk, c in zip(keys, coeffs)]
+    timed("zo_update", jax.jit(
+        lambda zp: jax.tree_util.tree_leaves(engine.zo_apply(zp, terms))),
+        zo_part)
+    if jax.tree_util.tree_leaves(bp_part) and lane.lane == "elastic_zo":
+        eta = jnp.float32(tail_learning_rate(lane))
+
+        def tail_prog(bp, zp):
+            g = jax.grad(lambda b: loss_fn(merge(zp, b), batch))(bp)
+            return jax.tree_util.tree_leaves(engine.tail_apply(bp, g, eta))
+        timed("bp_tail", jax.jit(tail_prog), bp_part, zo_part)
+    return out

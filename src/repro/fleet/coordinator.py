@@ -41,6 +41,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from . import commit_rule
 from .ledger import Commit, Ledger, Record
 from .replay import ReplaySchema, apply_committed
@@ -106,24 +107,31 @@ class Coordinator:
     # ---- bookkeeping shared with gossip peers --------------------------- #
     def record_outcome(self, step: int, outcome: commit_rule.CloseOutcome):
         """Histories, events, rejection counters, ledger appends."""
+        rec_obs = obs.get()
         self.ontime_history.append(outcome.ontime_bits)
         self.late_admit_history.append(outcome.late_admit_bits)
         self.events.extend(outcome.events)
-        for _, reason in outcome.rejected:
+        for w, reason in outcome.rejected:
             self.n_rejected += reason != "quarantined"
+            rec_obs.counter(f"fleet.rejected.{reason}").inc()
         for s, w, kind in self.gate.quarantine_events():
             tag = f"step {s}: worker {w} quarantine {kind}"
             if tag not in self.events:
                 self.events.append(tag)
+                rec_obs.event(f"quarantine_{kind}", track="fleet",
+                              step=s, worker=w)
         for w in sorted(outcome.records):
             self.ledger.append_record(outcome.records[w])
         self.ledger.append_commit(outcome.commit)
 
     def account_filtered(self, cstep: commit_rule.CommittedStep):
         m = self.schema.fleet.probes_per_worker
-        self.n_filtered += int(sum(
+        n = int(sum(
             m - cstep.mask[w * m:(w + 1) * m].sum()
             for w in cstep.commit.workers(self.schema.fleet.num_workers)))
+        self.n_filtered += n
+        if n:
+            obs.get().counter("fleet.filtered_probes").inc(n)
 
     def maybe_snapshot(self):
         if self.schema.fleet.snapshot_every and \

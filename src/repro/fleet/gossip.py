@@ -36,13 +36,13 @@ catch-up donor for crashed or partitioned peers.
 """
 from __future__ import annotations
 
-import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 import jax
 
+from .. import obs
 from ..configs.fleet import GossipConfig
 from .adversary import build_adversaries
 from .coordinator import Coordinator
@@ -208,33 +208,40 @@ def exchange(transport: ChaosTransport, gcfg: GossipConfig, step: int,
     ids = sorted(ids)
     if not recs or len(ids) < 2:
         return
+    rec_obs = obs.get()
     have: Dict[int, set] = {p: {p} & set(recs) for p in ids}
-    for rnd in range(gcfg.rounds):
-        snap = {p: frozenset(have[p]) for p in ids}
-        for src in ids:
-            others = [d for d in ids if d != src]
-            rng = np.random.default_rng(np.random.SeedSequence(
-                (transport.cfg.chaos_seed, step, rnd, src, _SEL_SALT)))
-            picks = rng.choice(others, size=min(gcfg.fanout, len(others)),
-                               replace=False)
-            for dst in (int(d) for d in picks):
-                novel = sorted(snap[src] - have[dst])
-                if not novel:
-                    continue          # digest round-trip, nothing to move
-                if not transport.peer_fate(step, src, dst, rnd).delivered:
-                    transport.n_gossip_dropped += len(novel)
-                    continue
-                for w in novel:
-                    transport.gossip_hop(recs[w])
-                    have[dst].add(w)
+    with rec_obs.span("gossip/push_rounds", track="fleet", step=step):
+        for rnd in range(gcfg.rounds):
+            snap = {p: frozenset(have[p]) for p in ids}
+            for src in ids:
+                others = [d for d in ids if d != src]
+                rng = np.random.default_rng(np.random.SeedSequence(
+                    (transport.cfg.chaos_seed, step, rnd, src, _SEL_SALT)))
+                picks = rng.choice(others,
+                                   size=min(gcfg.fanout, len(others)),
+                                   replace=False)
+                for dst in (int(d) for d in picks):
+                    novel = sorted(snap[src] - have[dst])
+                    if not novel:
+                        continue      # digest round-trip, nothing to move
+                    if not transport.peer_fate(step, src, dst,
+                                               rnd).delivered:
+                        transport.n_gossip_dropped += len(novel)
+                        rec_obs.counter(
+                            "fleet.wire.n_gossip_dropped").inc(len(novel))
+                        continue
+                    for w in novel:
+                        transport.gossip_hop(recs[w])
+                        have[dst].add(w)
     # anti-entropy: lossless ring sweeps until the component is quiescent
     target = set(recs)
-    while any(have[p] != target for p in ids):
-        for i, src in enumerate(ids):
-            dst = ids[(i + 1) % len(ids)]
-            for w in sorted(have[src] - have[dst]):
-                transport.gossip_hop(recs[w])
-                have[dst].add(w)
+    with rec_obs.span("gossip/anti_entropy", track="fleet", step=step):
+        while any(have[p] != target for p in ids):
+            for i, src in enumerate(ids):
+                dst = ids[(i + 1) % len(ids)]
+                for w in sorted(have[src] - have[dst]):
+                    transport.gossip_hop(recs[w])
+                    have[dst].add(w)
 
 
 # ------------------------------------------------------------------ #
@@ -280,17 +287,21 @@ def run_gossip_fleet(schema: ReplaySchema, loss_fn: Callable, params,
     n_catchups = n_reconciles = 0
     partition_prev: Optional[int] = None
     pending_restarts: List[int] = []
-    t0 = time.time()
+    rec_obs = obs.get()
+    t0 = obs.monotonic()
     for step in range(steps):
         group = gcfg.active_partition(step)
         quorum = quorum_side(group, W) if group is not None else full
         if group != partition_prev:   # also logs back-to-back windows
             if partition_prev is not None:
                 fleet_events.append(f"step {step}: partition healed")
+                rec_obs.event("partition_heal", track="fleet", step=step)
             if group is not None:
                 fleet_events.append(
                     f"step {step}: partition begins (quorum "
                     f"{bin(quorum)}, minority stalls)")
+                rec_obs.event("partition_begin", track="fleet", step=step,
+                              quorum=quorum)
         partition_prev = group
 
         # rejoins — deferred while the rejoiner is cut off from a donor
@@ -314,11 +325,15 @@ def run_gossip_fleet(schema: ReplaySchema, loss_fn: Callable, params,
                 if donor is None:
                     raise ValueError(
                         f"step {step}: no donor to reconcile peer {p.id}")
-                p.reconcile(donor, step)
+                with rec_obs.span("gossip/reconcile", track="fleet",
+                                  step=step, peer=p.id):
+                    p.reconcile(donor, step)
                 n_reconciles += 1
                 fleet_events.append(f"step {step}: peer {p.id} reconciled "
                                     f"after partition (from peer "
                                     f"{donor.id})")
+                rec_obs.event("reconcile", track="fleet", step=step,
+                              peer=p.id, donor=donor.id)
         for w, until in crash_at.get(step, []):
             peers[w].crash()
             fleet_events.append(f"step {step}: peer {w} crashed "
@@ -331,43 +346,55 @@ def run_gossip_fleet(schema: ReplaySchema, loss_fn: Callable, params,
             raise ValueError(
                 f"step {step}: crash/partition schedule left the quorum "
                 f"component empty")
-        arrivals = []
-        for p in active:
-            rec = p.compute_record(step, batch)
-            if p.id in adversaries:
-                rec = adversaries[p.id].tamper(rec, step)
-            fate = transport.fate(step, p.id)
-            transport.send(rec, fate)
-            arrivals.append((rec, fate))
-        exchange(transport, gcfg, step, [p.id for p in active], arrivals)
+        with rec_obs.span("gossip/step", track="fleet", step=step):
+            arrivals = []
+            with rec_obs.span("gossip/probe", track="fleet", step=step):
+                for p in active:
+                    rec = p.compute_record(step, batch)
+                    if p.id in adversaries:
+                        rec = adversaries[p.id].tamper(rec, step)
+                    fate = transport.fate(step, p.id)
+                    transport.send(rec, fate)
+                    arrivals.append((rec, fate))
+            with rec_obs.span("gossip/exchange", track="fleet", step=step):
+                exchange(transport, gcfg, step, [p.id for p in active],
+                         arrivals)
 
-        # every peer closes independently — and must land on the same bytes
-        wire = commit = records = None
-        for p in active:
-            c, r = p.close_and_apply(step, arrivals)
-            b = c.to_bytes()
-            if wire is None:
-                wire, commit, records = b, c, r
-            elif b != wire:
-                raise RuntimeError(
-                    f"leaderless commit diverged at step {step}: peer "
-                    f"{p.id} closed {b!r} vs {wire!r} — the commit rule "
-                    f"is not the pure function it must be")
-        # explicit retry accounting, once per step (not per peer): the
-        # never-empty fallback can pull back a record the transport
-        # dropped — the redelivery is real bytes even when the gate then
-        # rejects the record (identical to the star coordinator's books)
-        retried = active[0].closer.last_outcome.retried
-        if retried is not None:
-            transport.redeliver(retried)
-        masks.append(_bits_to_mask(commit.accepted, schema))
-        if trace:
-            param_trace.append(jax.tree.map(np.asarray, active[-1].params))
+            # every peer closes independently — and must land on the same
+            # bytes
+            wire = commit = records = None
+            with rec_obs.span("gossip/commit", track="fleet", step=step):
+                for p in active:
+                    c, r = p.close_and_apply(step, arrivals)
+                    b = c.to_bytes()
+                    if wire is None:
+                        wire, commit, records = b, c, r
+                    elif b != wire:
+                        raise RuntimeError(
+                            f"leaderless commit diverged at step {step}: "
+                            f"peer {p.id} closed {b!r} vs {wire!r} — the "
+                            f"commit rule is not the pure function it "
+                            f"must be")
+            # explicit retry accounting, once per step (not per peer): the
+            # never-empty fallback can pull back a record the transport
+            # dropped — the redelivery is real bytes even when the gate
+            # then rejects the record (identical to the star
+            # coordinator's books)
+            retried = active[0].closer.last_outcome.retried
+            if retried is not None:
+                transport.redeliver(retried)
+            masks.append(_bits_to_mask(commit.accepted, schema))
+            if trace:
+                param_trace.append(jax.tree.map(np.asarray,
+                                                active[-1].params))
         if log_every and (step % log_every == 0 or step == steps - 1):
             s, loss = active[-1].closer.loss_history[-1]
-            print(f"[gossip] step {s:5d} loss {loss:.4f} accepted "
-                  f"{bin(commit.accepted).count('1')}/{W} "
-                  f"(peers closing: {len(active)})", flush=True)
+            n_acc = bin(commit.accepted).count("1")
+            obs.log("gossip",
+                    f"step {s:5d} loss {loss:.4f} accepted "
+                    f"{n_acc}/{W} (peers closing: {len(active)})",
+                    step=s, loss=loss, accepted=n_acc,
+                    closing=len(active))
 
     # a run that ends mid-partition heals at the end: stalled minority
     # peers reconcile so every surviving peer lands on the canon
@@ -391,7 +418,7 @@ def run_gossip_fleet(schema: ReplaySchema, loss_fn: Callable, params,
         "topology": "gossip",
         "steps": steps,
         "workers": W,
-        "wall_s": time.time() - t0,
+        "wall_s": obs.monotonic() - t0,
         "bytes_uplink": transport.bytes_sent,
         "bytes_broadcast": 0,            # nobody broadcasts: peers gossip
         "bytes_gossip": transport.bytes_gossip,

@@ -27,7 +27,6 @@ model.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
@@ -35,6 +34,7 @@ import numpy as np
 
 import jax
 
+from .. import obs
 from ..configs.base import LaneConfig
 from ..configs.fleet import FleetConfig
 from .adversary import build_adversaries
@@ -160,46 +160,61 @@ def run_fleet(loss_fn: Callable, params, lane: LaneConfig,
     masks, param_trace = [], []
     bytes_broadcast = 0
     n_catchups = 0
-    t0 = time.time()
+    rec_obs = obs.get()
+    t0 = obs.monotonic()
     for step in range(steps):
-        for w in restart_at.get(step, []):
-            workers[w].restart(coordinator, step)
-            n_catchups += 1
-            coordinator.events.append(f"step {step}: worker {w} rejoined "
-                                      f"via ledger replay")
-        for w, until in crash_at.get(step, []):
-            workers[w].crash()
-            coordinator.events.append(f"step {step}: worker {w} crashed "
-                                      f"(down until {until})")
-        batch = batch_fn(step)
-        arrivals = []
-        for worker in workers:
-            if not worker.alive:
-                continue
-            rec = worker.compute_record(step, batch)
-            if worker.id in adversaries:
-                # wire-only tampering: the worker's local state (params,
-                # EF residual) stays honest, like a compromised uplink
-                rec = adversaries[worker.id].tamper(rec, step)
-            fate = transport.fate(step, worker.id)
-            transport.send(rec, fate)
-            arrivals.append((rec, fate))
-        if not arrivals:
-            raise ValueError("crash schedule left the fleet empty")
-        commit, records = coordinator.close_step(step, arrivals)
-        bytes_broadcast += commit.nbytes \
-            + sum(r.nbytes for r in records.values())
-        masks.append(_bits_to_mask(commit.accepted, schema))
-        for worker in workers:
-            if worker.alive:
-                worker.apply_commit(step, commit, records)
-        if trace:
-            param_trace.append(jax.tree.map(np.asarray, coordinator.params))
+        with rec_obs.span("fleet/step", track="fleet", step=step):
+            for w in restart_at.get(step, []):
+                workers[w].restart(coordinator, step)
+                n_catchups += 1
+                coordinator.events.append(f"step {step}: worker {w} rejoined "
+                                          f"via ledger replay")
+                rec_obs.event("worker_rejoin", track="fleet", step=step,
+                              worker=w)
+            for w, until in crash_at.get(step, []):
+                workers[w].crash()
+                coordinator.events.append(f"step {step}: worker {w} crashed "
+                                          f"(down until {until})")
+                rec_obs.event("worker_crash", track="fleet", step=step,
+                              worker=w, until=until)
+            batch = batch_fn(step)
+            arrivals = []
+            with rec_obs.span("fleet/probe", track="fleet", step=step):
+                for worker in workers:
+                    if not worker.alive:
+                        continue
+                    rec = worker.compute_record(step, batch)
+                    if worker.id in adversaries:
+                        # wire-only tampering: the worker's local state
+                        # (params, EF residual) stays honest, like a
+                        # compromised uplink
+                        rec = adversaries[worker.id].tamper(rec, step)
+                    fate = transport.fate(step, worker.id)
+                    transport.send(rec, fate)
+                    arrivals.append((rec, fate))
+            if not arrivals:
+                raise ValueError("crash schedule left the fleet empty")
+            with rec_obs.span("fleet/commit", track="fleet", step=step):
+                commit, records = coordinator.close_step(step, arrivals)
+            step_bytes = commit.nbytes + sum(r.nbytes
+                                             for r in records.values())
+            bytes_broadcast += step_bytes
+            rec_obs.counter("fleet.wire.broadcast_bytes").inc(step_bytes)
+            masks.append(_bits_to_mask(commit.accepted, schema))
+            with rec_obs.span("fleet/apply", track="fleet", step=step):
+                for worker in workers:
+                    if worker.alive:
+                        worker.apply_commit(step, commit, records)
+            if trace:
+                param_trace.append(jax.tree.map(np.asarray,
+                                                coordinator.params))
         if log_every and (step % log_every == 0 or step == steps - 1):
             s, loss = coordinator.loss_history[-1]
-            print(f"[fleet] step {s:5d} loss {loss:.4f} "
-                  f"accepted {bin(commit.accepted).count('1')}/"
-                  f"{fleet_cfg.num_workers}", flush=True)
+            n_acc = bin(commit.accepted).count("1")
+            obs.log("fleet",
+                    f"step {s:5d} loss {loss:.4f} "
+                    f"accepted {n_acc}/{fleet_cfg.num_workers}",
+                    step=s, loss=loss, accepted=n_acc)
 
     led = coordinator.ledger
     quarantine_events = coordinator.gate.quarantine_events()
@@ -207,7 +222,7 @@ def run_fleet(loss_fn: Callable, params, lane: LaneConfig,
         "topology": "star",
         "steps": steps,
         "workers": fleet_cfg.num_workers,
-        "wall_s": time.time() - t0,
+        "wall_s": obs.monotonic() - t0,
         "bytes_uplink": transport.bytes_sent,
         "bytes_broadcast": bytes_broadcast,
         "bytes_gossip": 0,

@@ -34,6 +34,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from .. import obs
 from ..configs.fleet import FleetConfig
 
 _P2P_SALT = 0x9067  # domain-separates peer links from origin fates
@@ -80,12 +81,16 @@ class ChaosTransport:
 
     def send(self, record, fate: Fate) -> bool:
         """Account a record publication; True if it entered the mesh."""
+        rec = obs.get()
         if not fate.delivered:
             self.n_dropped += 1
+            rec.counter("fleet.wire.n_dropped").inc()
             return False
         self.bytes_sent += record.nbytes
+        rec.counter("fleet.wire.uplink_bytes").inc(record.nbytes)
         if fate.delay > self.cfg.deadline:
             self.n_straggled += 1
+            rec.counter("fleet.wire.n_straggled").inc()
         return True
 
     def redeliver(self, record):
@@ -96,6 +101,9 @@ class ChaosTransport:
         to be wrong."""
         self.bytes_sent += record.nbytes
         self.n_redelivered += 1
+        rec = obs.get()
+        rec.counter("fleet.wire.uplink_bytes").inc(record.nbytes)
+        rec.counter("fleet.wire.n_redelivered").inc()
 
     def gossip_hop(self, record):
         """Account one delivered epidemic copy of `record` over a p2p
@@ -103,3 +111,4 @@ class ChaosTransport:
         record copy (``n_gossip_dropped``) — the link fate is decided
         before any copy is attempted (fleet/gossip.py exchange)."""
         self.bytes_gossip += record.nbytes
+        obs.get().counter("fleet.wire.gossip_bytes").inc(record.nbytes)

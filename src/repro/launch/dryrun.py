@@ -21,13 +21,13 @@ import argparse
 import dataclasses
 import json
 import sys
-import time
 import traceback
 from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from ..configs import ARCHS, SHAPES, LaneConfig, cell_matrix, get_arch, get_shape
 from ..core import api
 from ..core.elastic import TrainState
@@ -150,13 +150,13 @@ def update_depth(arch: str, shape_name: str, lane: LaneConfig, out_dir: Path):
     cfg = get_arch(arch)
     shape = get_shape(shape_name)
     mesh = make_production_mesh(multi_pod=False)
-    t0 = time.time()
+    t0 = obs.monotonic()
     try:
         add_depth_extrapolation(rec, cfg, shape, mesh, lane)
         rec["depth_mode"] = "unrolled"
     except Exception as e:  # noqa: BLE001
         rec["depth_error"] = f"{type(e).__name__}: {e}"
-    rec["depth_elapsed_s"] = round(time.time() - t0, 1)
+    rec["depth_elapsed_s"] = round(obs.monotonic() - t0, 1)
     out.write_text(json.dumps(rec, indent=1))
     return rec
 
@@ -172,7 +172,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, lane: LaneConfig,
     out = out_dir / f"{arch}__{shape_name}__{mesh_kind}{suffix}.json"
     if out.exists() and not force:
         return json.loads(out.read_text())
-    t0 = time.time()
+    t0 = obs.monotonic()
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
            "strategy": strategy,
@@ -194,7 +194,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, lane: LaneConfig,
         rec["status"] = "error"
         rec["error"] = f"{type(e).__name__}: {e}"
         rec["traceback"] = traceback.format_exc(limit=20)
-    rec["elapsed_s"] = round(time.time() - t0, 1)
+    rec["elapsed_s"] = round(obs.monotonic() - t0, 1)
     out_dir.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps(rec, indent=1))
     return rec

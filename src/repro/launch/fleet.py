@@ -43,6 +43,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from ..configs import (FleetConfig, GossipConfig, LaneConfig, RobustConfig,
                        ShapeConfig, get_arch, reduced)
 from ..core import api
@@ -184,7 +185,9 @@ def main(argv=None):
                     help="skip the single-process reference re-run "
                          "(int8 lane verifies it by default)")
     ap.add_argument("--seed", type=int, default=0)
+    obs.add_observability_args(ap)
     args = ap.parse_args(argv)
+    obs.configure_from_args(args)
 
     crashes = _parse_crashes(ap, args)
     try:
@@ -255,19 +258,19 @@ def main(argv=None):
                     "mask": jnp.asarray(m)}
 
     base_seed = jax.random.key_data(jax.random.key(args.seed + 1))
-    print(f"[fleet] {desc}: {args.workers} workers x "
-          f"{args.probes_per_worker} probes, lane={args.lane}, "
-          f"topology={args.topology}, dropout={args.dropout}, "
-          f"crashes={crashes or 'none'}, "
-          f"partitions={args.partition or 'none'}, "
-          f"byzantine={args.byzantine or 'none'}, "
-          f"robust={'on' if robust else 'off'}")
+    obs.log("fleet", f"{desc}: {args.workers} workers x "
+            f"{args.probes_per_worker} probes, lane={args.lane}, "
+            f"topology={args.topology}, dropout={args.dropout}, "
+            f"crashes={crashes or 'none'}, "
+            f"partitions={args.partition or 'none'}, "
+            f"byzantine={args.byzantine or 'none'}, "
+            f"robust={'on' if robust else 'off'}")
     res = run_fleet(loss_fn, params, lane, fleet_cfg, batch_fn,
                     steps=args.steps, base_seed=base_seed,
                     partition_fn=partition_fn, probe_fn=probe_fn,
                     log_every=max(args.steps // 10, 1))
     for e in res.coordinator.events:
-        print(f"[fleet] event: {e}")
+        obs.log("fleet", f"event: {e}")
     s = res.stats
     n_records = sum(len(t) for t in res.ledger.records.values())
     per_worker_step = s["ledger_bytes_zo"] / max(n_records, 1)
@@ -275,7 +278,7 @@ def main(argv=None):
     # earliest arrival when everything misses the deadline ("a step is
     # never empty", fleet/coordinator.py)
     some_rec = next(iter(res.ledger.records[0].values()))
-    print(f"[fleet] done: {s['steps']} steps, wall {s['wall_s']:.1f}s; "
+    obs.log("fleet", f"done: {s['steps']} steps, wall {s['wall_s']:.1f}s; "
           f"ZO wire {s['ledger_bytes_zo']}B "
           f"({per_worker_step:.1f}B/record, "
           f"{some_rec.zo_probe_nbytes}B/probe), tail wire "
@@ -291,8 +294,9 @@ def main(argv=None):
 
     failed = False
     if args.lane == "int8" and some_rec.zo_probe_nbytes > 9:
-        print(f"[fleet] ERROR int8 ZO probe entry is "
-              f"{some_rec.zo_probe_nbytes}B on the wire (> 9B budget)")
+        obs.log("fleet", f"ERROR int8 ZO probe entry is "
+                f"{some_rec.zo_probe_nbytes}B on the wire (> 9B budget)",
+                level="error")
         failed = True
 
     n_exact = 0
@@ -302,20 +306,21 @@ def main(argv=None):
     for w in res.workers:
         if not w.alive:
             # crash scheduled past the end of the run: nothing to verify
-            print(f"[fleet] note: worker {w.id} still down at end of run")
+            obs.log("fleet", f"note: worker {w.id} still down at end of run")
             continue
         ok = (jax.tree.structure(w.params) == canon_struct
               and all(jnp.array_equal(a, b) for a, b in
                       zip(jax.tree.leaves(w.params), canon_leaves)))
         if not ok:
-            print(f"[fleet] ERROR worker {w.id} diverged from the canon")
+            obs.log("fleet", f"ERROR worker {w.id} diverged from the canon",
+                    level="error")
             failed = True
         n_exact += ok
         n_checked += 1
     who = "the coordinator" if args.topology == "star" \
         else "every other surviving peer (leaderless canon)"
-    print(f"[fleet] {n_exact}/{n_checked} live workers bit-exact with "
-          f"{who} at step {res.coordinator.step}")
+    obs.log("fleet", f"{n_exact}/{n_checked} live workers bit-exact with "
+            f"{who} at step {res.coordinator.step}")
 
     if args.lane == "int8" and not args.no_verify_reference:
         # replay the realized masks through the single-process reference
@@ -334,12 +339,13 @@ def main(argv=None):
         ok = all(jnp.array_equal(a, b)
                  for a, b in zip(ref_leaves, canon_leaves))
         if ok:
-            print("[fleet] single-process int8 reference: bit-exact")
+            obs.log("fleet", "single-process int8 reference: bit-exact")
         else:
-            print("[fleet] ERROR fleet diverged from the single-process "
-                  "int8 reference")
+            obs.log("fleet", "ERROR fleet diverged from the "
+                    "single-process int8 reference", level="error")
             failed = True
 
+    obs.write_outputs(args)
     if failed:
         sys.exit(1)
 

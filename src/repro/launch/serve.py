@@ -10,10 +10,10 @@ uses the path-aware grow_dense_caches instead of a shape heuristic).
 from __future__ import annotations
 
 import argparse
-import time
 
 import numpy as np
 
+from .. import obs
 from ..configs import LaneConfig, ServeConfig, get_arch, reduced
 from ..serve import Engine, SamplingParams, dense_generate
 
@@ -37,7 +37,9 @@ def main(argv=None):
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
+    obs.add_observability_args(ap)
     args = ap.parse_args(argv)
+    obs.configure_from_args(args)
 
     cfg = get_arch(args.arch)
     if args.smoke:
@@ -51,13 +53,14 @@ def main(argv=None):
         if args.temperature != 0.0 or args.top_k or args.top_p != 1.0:
             ap.error("--temperature/--top-k/--top-p require --paged "
                      "(the dense baseline is greedy-only)")
-        t0 = time.time()
+        t0 = obs.monotonic()
         out = dense_generate(cfg, _init_params(cfg, total), prompts,
                              args.tokens)
-        dt = time.time() - t0
-        print(f"[serve] dense: {args.tokens} tok/seq x{args.batch} in "
-              f"{dt:.2f}s ({args.batch * args.tokens / dt:.1f} tok/s)")
-        print("[serve] sample:", out[0][:16])
+        dt = obs.monotonic() - t0
+        obs.log("serve", f"dense: {args.tokens} tok/seq x{args.batch} in "
+                f"{dt:.2f}s ({args.batch * args.tokens / dt:.1f} tok/s)")
+        obs.log("serve", f"sample: {out[0][:16]}")
+        obs.write_outputs(args)
         return
 
     slots = args.slots or args.batch
@@ -71,17 +74,21 @@ def main(argv=None):
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p,
                               seed=args.seed)
-    t0 = time.time()
+    t0 = obs.monotonic()
     outs = eng.generate([list(p) for p in prompts], sampling, args.tokens)
-    dt = time.time() - t0
+    dt = obs.monotonic() - t0
     util = eng.page_utilization()
     n_tok = sum(len(o) for o in outs)
-    print(f"[serve] paged: {n_tok} tokens across {args.batch} requests in "
-          f"{dt:.2f}s ({n_tok / dt:.1f} tok/s, {eng.steps_run} engine steps)")
-    print(f"[serve] pages: peak {util['peak_pages']}/{util['total_pages']} "
-          f"({100 * util['peak_util']:.0f}%), mean "
-          f"{100 * util['mean_util']:.0f}%")
-    print("[serve] sample:", outs[0][:16])
+    obs.log("serve",
+            f"paged: {n_tok} tokens across {args.batch} requests in "
+            f"{dt:.2f}s ({n_tok / dt:.1f} tok/s, {eng.steps_run} engine "
+            f"steps)", tokens=n_tok, wall_s=dt, steps=eng.steps_run)
+    obs.log("serve",
+            f"pages: peak {util['peak_pages']}/{util['total_pages']} "
+            f"({100 * util['peak_util']:.0f}%), mean "
+            f"{100 * util['mean_util']:.0f}%")
+    obs.log("serve", f"sample: {outs[0][:16]}")
+    obs.write_outputs(args)
 
 
 def _init_params(cfg, total):

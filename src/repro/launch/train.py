@@ -14,6 +14,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from ..configs import LaneConfig, ShapeConfig, get_arch, reduced
 from ..core import api
 from ..data.synthetic import token_batch
@@ -41,7 +42,13 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir")
     ap.add_argument("--mesh", default="",
                     help="e.g. '2x2:data,model' to shard across local devices")
+    ap.add_argument("--profile-phases", action="store_true",
+                    help="time the engine's canonical step phases "
+                         "(separately-jitted diagnostic programs with "
+                         "device syncs; the production step is untouched)")
+    obs.add_observability_args(ap)
     args = ap.parse_args(argv)
+    obs.configure_from_args(args)
 
     cfg = get_arch(args.arch)
     if args.smoke:
@@ -84,10 +91,20 @@ def main(argv=None):
                                ckpt_dir=args.ckpt_dir,
                                log_every=max(args.steps // 10, 1),
                                probe_drop_rate=args.probe_drop)
+    if args.profile_phases:
+        from ..core import engine as eng
+        phases = eng.profile_step_phases(
+            eng.engine_for(lane, model.partition_fn
+                           if hasattr(model, "partition_fn") else None),
+            model.loss_fn, state, batch_fn(0))
+        for name, us in phases.items():
+            obs.log("train", f"phase {name:10s} {us:10.1f} us")
+
     state, history = run(model.train_step, state, batch_fn, loop,
                          param_shardings=pshard)
-    print(f"[train] done at step {int(state.step)}; "
-          f"logged {len(history)} loss points")
+    obs.log("train", f"done at step {int(state.step)}; "
+            f"logged {len(history)} loss points")
+    obs.write_outputs(args)
 
 
 if __name__ == "__main__":

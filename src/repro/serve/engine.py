@@ -32,6 +32,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from ..configs.base import ATTN, LaneConfig, ModelConfig, ShapeConfig
 from ..configs.serve import ServeConfig
 from ..core import api
@@ -168,33 +169,47 @@ class Engine:
     # ------------------------------------------------------------- #
     def step(self) -> List[StreamEvent]:
         """One engine iteration; returns the stream events it produced."""
-        events: List[StreamEvent] = []
-        for seq in self.sched.poll_admissions():
-            self._admit(seq, events)
-        plan = self.sched.prepare_step()
-        if plan is None:
+        rec = obs.get()
+        with rec.span("serve/tick", track="serve"):
+            events: List[StreamEvent] = []
+            with rec.span("serve/prefill", track="serve"):
+                for seq in self.sched.poll_admissions():
+                    self._admit(seq, events)
+            plan = self.sched.prepare_step()
+            if plan is None:
+                return events
+            with rec.span("serve/decode", track="serve",
+                          rows=plan.num_active) as dsp:
+                logits, self.caches = self._decode(
+                    self.params, jnp.asarray(plan.tokens)[:, None],
+                    self.caches, jnp.asarray(plan.page_table),
+                    jnp.asarray(plan.seq_lens))
+                if not plan.temperature.any():
+                    # all-greedy step: skip the sampler's full-vocab
+                    # sorts/PRNG (bitwise the sampler's greedy branch)
+                    toks = np.asarray(
+                        jnp.argmax(logits, axis=-1).astype(jnp.int32))
+                else:
+                    toks = np.asarray(sampler.sample_tokens(
+                        logits, jnp.asarray(plan.temperature),
+                        jnp.asarray(plan.top_k), jnp.asarray(plan.top_p),
+                        jnp.asarray(plan.seed), jnp.asarray(plan.step),
+                        vocab_size=self.cfg.vocab_size))
+            if rec.enabled and plan.num_active:
+                # np.asarray already synced the device work; the per-row
+                # quotient is the per-token decode latency
+                rec.histogram("serve.decode_token_ms").observe(
+                    dsp.dur_ns / 1e6 / plan.num_active)
+                rec.counter("serve.decode_tokens").inc(plan.num_active)
+            active = list(self.sched.running)
+            done = {s.req.rid for s in self.sched.commit_step(toks)}
+            for seq in active:
+                tok = seq.generated[-1]
+                events.append(StreamEvent(seq.req.rid, tok,
+                                          self.detok(tok),
+                                          seq.req.rid in done))
+            self.steps_run += 1
             return events
-        logits, self.caches = self._decode(
-            self.params, jnp.asarray(plan.tokens)[:, None], self.caches,
-            jnp.asarray(plan.page_table), jnp.asarray(plan.seq_lens))
-        if not plan.temperature.any():
-            # all-greedy step: skip the sampler's full-vocab sorts/PRNG
-            # (bitwise the sampler's greedy branch)
-            toks = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
-        else:
-            toks = np.asarray(sampler.sample_tokens(
-                logits, jnp.asarray(plan.temperature),
-                jnp.asarray(plan.top_k), jnp.asarray(plan.top_p),
-                jnp.asarray(plan.seed), jnp.asarray(plan.step),
-                vocab_size=self.cfg.vocab_size))
-        active = list(self.sched.running)
-        done = {s.req.rid for s in self.sched.commit_step(toks)}
-        for seq in active:
-            tok = seq.generated[-1]
-            events.append(StreamEvent(seq.req.rid, tok, self.detok(tok),
-                                      seq.req.rid in done))
-        self.steps_run += 1
-        return events
 
     def run(self, callback: Optional[Callable[[StreamEvent], None]] = None,
             max_steps: int = 100_000) -> Dict[int, List[int]]:
@@ -203,14 +218,15 @@ class Engine:
         call; `callback` sees every stream event. A long-lived server
         should periodically `sched.clear_finished()` to bound memory."""
         start = len(self.sched.finished)
-        for _ in range(max_steps):
-            if not self.sched.has_work():
-                break
-            for ev in self.step():
-                if callback is not None:
-                    callback(ev)
-        else:
-            raise RuntimeError("engine did not drain within max_steps")
+        with obs.get().span("serve/run", track="serve"):
+            for _ in range(max_steps):
+                if not self.sched.has_work():
+                    break
+                for ev in self.step():
+                    if callback is not None:
+                        callback(ev)
+            else:
+                raise RuntimeError("engine did not drain within max_steps")
         self.sched.check_invariants()
         return {s.req.rid: list(s.generated)
                 for s in self.sched.finished[start:]}

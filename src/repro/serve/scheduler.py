@@ -26,6 +26,7 @@ from typing import Deque, List, Optional, Sequence as Seq
 
 import numpy as np
 
+from .. import obs
 from ..configs.serve import ServeConfig
 from .kv_pages import NULL_PAGE, PagePool
 from .sampler import SamplingParams
@@ -54,6 +55,7 @@ class _Sequence:
     generated: List[int] = field(default_factory=list)
     next_token: int = 0              # token to feed at the next decode step
     preemptions: int = 0
+    submit_ns: int = 0               # obs TTFT stamp (0 = recorder off)
 
     @property
     def cached_prompt(self) -> List[int]:
@@ -120,7 +122,10 @@ class Scheduler:
                 f"> pool {s.num_pages - 1}; would deadlock")
         req = Request(next(self._rid), list(prompt),
                       sampling or SamplingParams(), max_new, prefix_extra)
-        self.waiting.append(_Sequence(req))
+        rec = obs.get()
+        self.waiting.append(_Sequence(
+            req, submit_ns=obs.perf_ns() if rec.enabled else 0))
+        rec.gauge("serve.queue_depth").set(len(self.waiting))
         return req.rid
 
     def has_work(self) -> bool:
@@ -153,10 +158,16 @@ class Scheduler:
             self.slots[seq.slot] = seq
             self._admit_order.append(seq)
             out.append(seq)
+        rec = obs.get()
+        if rec.enabled:
+            rec.gauge("serve.queue_depth").set(len(self.waiting))
+            if out:
+                rec.counter("serve.admissions").inc(len(out))
         return out
 
     # ---------------- per-step assembly ----------------------------- #
     def _evict(self, seq: _Sequence) -> None:
+        obs.get().counter("serve.evictions").inc()
         self.pool.free(seq.pages)
         seq.pages = []
         self.slots[seq.slot] = None
@@ -220,6 +231,8 @@ class Scheduler:
         self.util_peak = max(self.util_peak, used)
         self.util_sum += used
         self.util_steps += 1
+        obs.get().gauge("serve.page_util").set(
+            used / max(self.serve.num_pages - 1, 1))
         return plan
 
     def _preempt_seq(self, victim: _Sequence) -> None:
@@ -228,6 +241,11 @@ class Scheduler:
         victim.pos = 0
         victim.preemptions += 1
         self.waiting.appendleft(victim)
+        rec = obs.get()
+        rec.counter("serve.preemptions").inc()
+        if rec.enabled:
+            rec.event("preempt", track="serve", rid=victim.req.rid,
+                      generated=len(victim.generated))
 
     # ---------------- commit ---------------------------------------- #
     def record_first_token(self, seq: _Sequence, token: int) -> bool:
@@ -249,6 +267,9 @@ class Scheduler:
     def _append(self, seq: _Sequence, token: int) -> bool:
         seq.generated.append(token)
         seq.next_token = token
+        if seq.submit_ns and len(seq.generated) == 1:
+            obs.get().histogram("serve.ttft_ms").observe(
+                (obs.perf_ns() - seq.submit_ns) / 1e6)
         eos = self.serve.eos_id
         if seq.budget_left <= 0 or (eos >= 0 and token == eos):
             self._evict(seq)

@@ -89,6 +89,8 @@ def _array_manifest(step: int, arrays: Dict[str, np.ndarray],
     return {
         "step": int(step),
         "mode": "full",
+        # wall-clock metadata stamp: time.time() is right here (and only
+        # here) — durations elsewhere use obs.monotonic
         "time": time.time(),
         "keys": list(arrays.keys()),
         "shapes": [list(a.shape) for a in arrays.values()],

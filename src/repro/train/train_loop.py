@@ -8,7 +8,6 @@ mesh-independent).
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional
 
@@ -17,6 +16,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from ..core.elastic import TrainState
 from . import checkpoint as ckpt
 
@@ -94,10 +94,11 @@ def run(step_fn: Callable, state: TrainState,
                                         shardings=param_shardings)
             state = TrainState(params, jnp.int32(last), state.seed)
             start = last
-            print(f"[train] resumed from step {last}")
+            obs.log("train", f"resumed from step {last}", step=last)
 
+    rec = obs.get()
     rng = np.random.default_rng(cfg.seed + 17)
-    t0 = time.time()
+    t0 = obs.monotonic()
     history = []
     for step in range(start, cfg.total_steps):
         batch = batch_fn(step)
@@ -108,14 +109,27 @@ def run(step_fn: Callable, state: TrainState,
                     cfg.probe_drop_rate).astype(np.float32)
             if mask.sum() == 0:
                 mask[0] = 1.0      # never drop every probe
-        state, metrics = jstep(state, batch, jnp.asarray(mask))
+        with rec.span("train/step", track="train", step=step) as sp:
+            state, metrics = jstep(state, batch, jnp.asarray(mask))
+            if rec.enabled:
+                jax.block_until_ready(metrics)
+        if rec.enabled:
+            rec.histogram("train.step_ms").observe(sp.dur_ns / 1e6)
+            toks = batch.get("tokens")      # absent for vision batches
+            ntok = int(np.prod(toks.shape)) if hasattr(toks, "shape") else 0
+            if ntok and sp.dur_ns:
+                rec.counter("train.tokens").inc(ntok)
+                rec.gauge("train.tokens_per_s").set(ntok / (sp.dur_ns / 1e9))
+            rec.gauge("train.loss").set(float(metrics["loss"]))
         if cfg.log_every and (step % cfg.log_every == 0
                               or step == cfg.total_steps - 1):
             loss = float(metrics["loss"])
             history.append((step, loss))
-            dt = time.time() - t0
-            print(f"[train] step {step:6d} loss {loss:.4f} "
-                  f"({dt / max(step - start + 1, 1):.3f}s/step)", flush=True)
+            dt = obs.monotonic() - t0
+            obs.log("train",
+                    f"step {step:6d} loss {loss:.4f} "
+                    f"({dt / max(step - start + 1, 1):.3f}s/step)",
+                    step=step, loss=loss)
         if saver and step > start and step % cfg.ckpt_every == 0:
             saver.save(step, state.params, extra={"loss": float(metrics['loss'])})
     if saver:

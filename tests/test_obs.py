@@ -1,0 +1,339 @@
+"""repro.obs unit acceptance: recorder primitives, exporters, CLI glue.
+
+Fast host-only tests (no jax): span nesting and the Chrome-trace
+round-trip, the typed metrics registry, the no-op singleton's
+zero-allocation contract and overhead bound, the quiet/verbose switch,
+and the trace validator's duty to *reject* malformed documents. The
+numerics-inert integration bar lives in tests/test_obs_inert.py.
+"""
+import argparse
+import json
+import time
+
+import pytest
+
+from repro import obs
+from repro.obs import NullRecorder, Recorder
+from repro.obs.export import (chrome_trace, load_chrome_trace,
+                              validate_chrome_trace, write_chrome_trace)
+
+
+@pytest.fixture(autouse=True)
+def _pristine_obs():
+    """Every test starts and ends on the no-op singleton, verbose."""
+    obs.uninstall()
+    obs.set_verbosity("verbose")
+    yield
+    obs.uninstall()
+    obs.set_verbosity("verbose")
+
+
+# ------------------------------------------------------------------ #
+# spans
+# ------------------------------------------------------------------ #
+
+
+def test_span_nesting_depth_and_order():
+    rec = Recorder()
+    with rec.span("outer", track="fleet", step=3):
+        with rec.span("mid", track="fleet"):
+            with rec.span("inner", track="fleet"):
+                pass
+        with rec.span("mid2", track="fleet"):
+            pass
+    # completion order: innermost first, outer last
+    names = [s["name"] for s in rec.spans]
+    assert names == ["inner", "mid", "mid2", "outer"]
+    depth = {s["name"]: s["depth"] for s in rec.spans}
+    assert depth == {"outer": 0, "mid": 1, "mid2": 1, "inner": 2}
+    outer = rec.spans[-1]
+    assert outer["args"] == {"step": 3}
+    # children are contained in the parent interval
+    for s in rec.spans[:-1]:
+        assert s["ts"] >= outer["ts"]
+        assert s["ts"] + s["dur"] <= outer["ts"] + outer["dur"]
+
+
+def test_span_dur_readable_after_exit():
+    rec = Recorder()
+    with rec.span("t") as sp:
+        time.sleep(0.01)
+    assert sp.dur_ns >= 5_000_000     # slept 10ms, allow scheduler slop
+    assert rec.spans[0]["dur"] == sp.dur_ns
+
+
+def test_span_totals_aggregates_by_name():
+    rec = Recorder()
+    for _ in range(3):
+        with rec.span("a"):
+            pass
+    with rec.span("b"):
+        pass
+    tot = rec.span_totals()
+    assert tot["a"]["count"] == 3 and tot["b"]["count"] == 1
+    assert tot["a"]["mean_ms"] == pytest.approx(tot["a"]["total_ms"] / 3)
+
+
+def test_span_closes_on_exception():
+    rec = Recorder()
+    with pytest.raises(RuntimeError):
+        with rec.span("boom"):
+            raise RuntimeError("x")
+    assert [s["name"] for s in rec.spans] == ["boom"]
+    # stack unwound: a fresh span starts at depth 0 again
+    with rec.span("after"):
+        pass
+    assert rec.spans[-1]["depth"] == 0
+
+
+# ------------------------------------------------------------------ #
+# metrics
+# ------------------------------------------------------------------ #
+
+
+def test_metrics_registry_identity_and_values():
+    rec = Recorder()
+    c = rec.counter("n")
+    assert rec.counter("n") is c      # registry, not a factory
+    c.inc()
+    c.inc(41)
+    rec.gauge("g").set(2)
+    rec.gauge("g").set(7.5)           # last value wins
+    snap = rec.snapshot()
+    assert snap["counters"] == {"n": 42}
+    assert snap["gauges"] == {"g": 7.5}
+
+
+def test_histogram_summary_and_quantiles():
+    rec = Recorder()
+    h = rec.histogram("lat")
+    for v in [1.0, 2.0, 4.0, 8.0, 1000.0]:
+        h.observe(v)
+    s = h.summary()
+    assert s["count"] == 5
+    assert s["sum"] == pytest.approx(1015.0)
+    assert s["min"] == 1.0 and s["max"] == 1000.0
+    # power-of-two buckets: quantile returns the bucket's upper bound
+    assert s["p50"] in (2.0, 4.0)
+    assert s["p99"] == 1024.0
+    # zero/negative land in the underflow bin, quantile reports 0
+    h2 = rec.histogram("z")
+    h2.observe(0.0)
+    assert h2.summary()["p50"] == 0.0
+
+
+def test_histogram_empty_summary_is_zeroes():
+    s = Recorder().histogram("e").summary()
+    assert s["count"] == 0 and s["p99"] == 0.0
+
+
+def test_reset_clears_but_keeps_recording():
+    rec = Recorder()
+    with rec.span("a"):
+        pass
+    rec.counter("c").inc()
+    rec.event("e")
+    rec.reset()
+    assert not rec.spans and not rec.events
+    assert rec.snapshot()["counters"] == {}
+    with rec.span("b"):
+        pass
+    assert [s["name"] for s in rec.spans] == ["b"]
+
+
+# ------------------------------------------------------------------ #
+# the no-op singleton
+# ------------------------------------------------------------------ #
+
+
+def test_null_recorder_returns_cached_singletons():
+    nrec = NullRecorder()
+    assert not nrec.enabled
+    # every disabled call site shares the same null objects: zero
+    # allocations on the hot path
+    assert nrec.counter("a") is nrec.counter("b")
+    assert nrec.counter("a") is nrec.gauge("g") is nrec.histogram("h")
+    assert nrec.span("x") is nrec.span("y", track="fleet", step=1)
+    with nrec.span("x") as sp:
+        assert sp.dur_ns == 0
+    nrec.counter("a").inc(5)
+    nrec.event("nothing", step=1)
+    assert nrec.snapshot() == {} and nrec.span_totals() == {}
+    assert not nrec.spans and not nrec.events
+
+
+def test_null_recorder_overhead_bound():
+    """The disabled path must stay within ~10x of a bare loop — i.e.
+    a couple of method calls, no allocation, no locking."""
+    nrec = NullRecorder()
+    n = 50_000
+
+    def bare():
+        t0 = time.perf_counter_ns()
+        x = 0
+        for i in range(n):
+            x += i
+        return time.perf_counter_ns() - t0, x
+
+    def instrumented():
+        t0 = time.perf_counter_ns()
+        x = 0
+        for i in range(n):
+            with nrec.span("s"):
+                x += i
+            nrec.counter("c").inc()
+        return time.perf_counter_ns() - t0, x
+
+    bare()
+    instrumented()                       # warm both
+    t_bare = min(bare()[0] for _ in range(3))
+    t_inst = min(instrumented()[0] for _ in range(3))
+    assert t_inst < 10 * t_bare + 50_000_000, \
+        f"null recorder overhead {t_inst / max(t_bare, 1):.1f}x"
+
+
+def test_install_uninstall_cycle():
+    assert isinstance(obs.get(), NullRecorder)
+    rec = obs.install()
+    assert obs.get() is rec and rec.enabled
+    obs.uninstall()
+    assert isinstance(obs.get(), NullRecorder)
+    # re-arming a carried recorder (the bench warm-disarm pattern)
+    obs.install(rec)
+    assert obs.get() is rec
+
+
+# ------------------------------------------------------------------ #
+# structured log + quiet switch
+# ------------------------------------------------------------------ #
+
+
+def test_log_echoes_and_records(capsys):
+    rec = obs.install()
+    obs.log("fleet", "step 3 loss 1.0", step=3, loss=1.0)
+    assert "[fleet] step 3 loss 1.0" in capsys.readouterr().out
+    (ev,) = rec.events
+    assert ev["name"] == "step 3 loss 1.0" and ev["track"] == "fleet"
+    assert ev["fields"] == {"step": 3, "loss": 1.0}
+
+
+def test_quiet_silences_stdout_but_not_event_log(capsys):
+    rec = obs.install()
+    obs.set_verbosity("quiet")
+    obs.log("gossip", "round done", step=1)
+    assert capsys.readouterr().out == ""
+    assert len(rec.events) == 1          # the log itself is unaffected
+
+
+def test_log_without_recorder_still_prints(capsys):
+    obs.log("train", "hello")
+    assert "[train] hello" in capsys.readouterr().out
+
+
+def test_set_verbosity_rejects_unknown():
+    with pytest.raises(ValueError):
+        obs.set_verbosity("loud")
+
+
+# ------------------------------------------------------------------ #
+# CLI glue
+# ------------------------------------------------------------------ #
+
+
+def _args(argv):
+    ap = argparse.ArgumentParser()
+    obs.add_observability_args(ap)
+    return ap.parse_args(argv)
+
+
+def test_configure_from_args_noop_without_flags():
+    rec = obs.configure_from_args(_args([]))
+    assert isinstance(rec, NullRecorder)
+
+
+def test_configure_write_round_trip(tmp_path, capsys):
+    trace = tmp_path / "t.json"
+    metrics = tmp_path / "m.json"
+    args = _args(["--trace", str(trace), "--metrics", str(metrics),
+                  "--quiet"])
+    rec = obs.configure_from_args(args)
+    assert rec.enabled and obs.get_verbosity() == "quiet"
+    with rec.span("work", track="train"):
+        rec.counter("n").inc(3)
+    obs.log("train", "suppressed")
+    assert capsys.readouterr().out == ""
+    obs.write_outputs(args)
+    evs = load_chrome_trace(trace)
+    assert any(e["ph"] == "X" and e["name"] == "work" for e in evs)
+    snap = json.loads(metrics.read_text())
+    assert snap["counters"] == {"n": 3}
+
+
+# ------------------------------------------------------------------ #
+# Chrome-trace export + validation
+# ------------------------------------------------------------------ #
+
+
+def test_chrome_trace_round_trip(tmp_path):
+    rec = Recorder()
+    with rec.span("fleet/step", track="fleet", step=0):
+        with rec.span("fleet/probe", track="fleet"):
+            pass
+    with rec.span("serve/tick", track="serve"):
+        pass
+    rec.event("preempt", track="serve", rid=2)
+    path = tmp_path / "trace.json"
+    write_chrome_trace(rec, path)
+    evs = load_chrome_trace(path)
+
+    meta = [e for e in evs if e["ph"] == "M"]
+    names = {e["args"]["name"] for e in meta if e["name"] == "thread_name"}
+    assert {"fleet", "serve"} <= names
+    # stable tid order: fleet before serve (export._TRACK_ORDER)
+    tid = {e["args"]["name"]: e["tid"] for e in meta
+           if e["name"] == "thread_name"}
+    assert tid["fleet"] < tid["serve"]
+
+    xs = {e["name"]: e for e in evs if e["ph"] == "X"}
+    assert set(xs) == {"fleet/step", "fleet/probe", "serve/tick"}
+    # nesting survives the µs conversion: child within parent interval
+    p, c = xs["fleet/step"], xs["fleet/probe"]
+    assert p["ts"] <= c["ts"]
+    assert c["ts"] + c["dur"] <= p["ts"] + p["dur"] + 1e-3
+    assert p["args"] == {"step": 0}
+
+    (inst,) = [e for e in evs if e["ph"] == "i"]
+    assert inst["name"] == "preempt"
+    assert inst["args"] == {"rid": 2, "level": "info"}
+
+
+def test_validate_rejects_garbage():
+    with pytest.raises(ValueError, match="envelope"):
+        validate_chrome_trace([])
+    with pytest.raises(ValueError, match="must be a list"):
+        validate_chrome_trace({"traceEvents": {}})
+    with pytest.raises(ValueError, match="not an object"):
+        validate_chrome_trace({"traceEvents": ["nope"]})
+    with pytest.raises(ValueError, match="missing 'pid'"):
+        validate_chrome_trace(
+            {"traceEvents": [{"ph": "X", "name": "a", "tid": 1}]})
+    with pytest.raises(ValueError, match="unknown phase"):
+        validate_chrome_trace(
+            {"traceEvents": [{"ph": "Q", "name": "a", "pid": 1, "tid": 1}]})
+    with pytest.raises(ValueError, match="bad ts"):
+        validate_chrome_trace(
+            {"traceEvents": [{"ph": "i", "name": "a", "pid": 1, "tid": 1,
+                              "ts": -1}]})
+    with pytest.raises(ValueError, match="bad dur"):
+        validate_chrome_trace(
+            {"traceEvents": [{"ph": "X", "name": "a", "pid": 1, "tid": 1,
+                              "ts": 0.0}]})
+
+
+def test_validate_accepts_real_export():
+    rec = Recorder()
+    with rec.span("a"):
+        pass
+    rec.event("e")
+    doc = chrome_trace(rec)
+    assert len(validate_chrome_trace(doc)) == len(doc["traceEvents"])

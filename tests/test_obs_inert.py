@@ -1,0 +1,177 @@
+"""Observability is numerics-inert — the flight recorder's hard bar.
+
+The recorder only wraps host-side control flow (spans around jitted
+callables, counters off transport bookkeeping); it must never change a
+single bit of the training stream. Pinned here the strongest way we
+can: the full 8-worker chaos fleet (dropout + stragglers + crash/rejoin)
+runs twice, instrumented and uninstrumented, and the canonical parameter
+stream must match bit-for-bit at every step — on both lanes (fp32
+tiny-llama elastic_zo, int8 LeNet Alg. 2).
+
+Also pins the serve acceptance criterion: a traced paged-serving run
+emits a Chrome-trace whose tick spans cover >= 90% of the engine's wall
+time, and the document passes the schema validator CI uses.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import obs
+from repro.configs import (ARCHS, FleetConfig, LaneConfig, ServeConfig,
+                           ShapeConfig, get_arch, reduced)
+from repro.core import api
+from repro.core.int8 import quant_from_float
+from repro.data.synthetic import glyphs, token_batch
+from repro.fleet import make_int8_probe_fn, run_fleet
+from repro.models import lenet
+from repro.obs.export import chrome_trace, validate_chrome_trace
+from repro.serve import Engine, SamplingParams
+from repro.sharding.rules import ShardingRules
+
+# minutes-scale integration: two full chaos fleets per lane
+pytestmark = pytest.mark.slow
+
+WORKERS = 8
+STEPS = 6
+CRASH = (5, 2, 2)        # worker 5 dies at step 2, rejoins at step 4
+
+
+@pytest.fixture(autouse=True)
+def _pristine_obs():
+    obs.uninstall()
+    obs.set_verbosity("quiet")       # chaos runs x2: keep stdout calm
+    yield
+    obs.uninstall()
+    obs.set_verbosity("verbose")
+
+
+def _bitwise_equal(a, b):
+    leaves_a, leaves_b = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(leaves_a) == len(leaves_b) and all(
+        jnp.array_equal(x, y) for x, y in zip(leaves_a, leaves_b))
+
+
+def _chaos_cfg():
+    return FleetConfig(num_workers=WORKERS, probes_per_worker=1,
+                       dropout=0.25, max_delay=2, deadline=1,
+                       chaos_seed=3, snapshot_every=4, crashes=(CRASH,))
+
+
+def _assert_streams_identical(ref, ins):
+    assert len(ref.param_trace) == len(ins.param_trace) == STEPS
+    for t, (a, b) in enumerate(zip(ref.param_trace, ins.param_trace)):
+        assert _bitwise_equal(a, b), \
+            f"instrumentation changed the param stream at step {t}"
+    assert _bitwise_equal(ref.params, ins.params)
+    for t, (ma, mb) in enumerate(zip(ref.masks, ins.masks)):
+        assert np.array_equal(ma, mb), f"probe masks diverged at step {t}"
+
+
+def _assert_recorder_saw_the_fleet(rec):
+    tot = rec.span_totals()
+    assert tot["fleet/step"]["count"] == STEPS
+    assert tot["fleet/probe"]["count"] == STEPS
+    assert tot["fleet/commit"]["count"] == STEPS
+    snap = rec.snapshot()
+    assert snap["counters"]["fleet.wire.uplink_bytes"] > 0
+    assert snap["counters"]["fleet.wire.broadcast_bytes"] > 0
+    assert snap["counters"]["fleet.wire.n_dropped"] > 0, \
+        "chaos never fired — the inertness claim wasn't stressed"
+    names = {e["name"] for e in rec.events}
+    assert "worker_crash" in names and "worker_rejoin" in names
+    # and the trace it exports is a loadable Chrome document
+    validate_chrome_trace(chrome_trace(rec))
+
+
+def test_fp32_fleet_chaos_is_bit_exact_under_instrumentation():
+    cfg = reduced(get_arch("llama3-8b"), num_layers=2, d_model=32,
+                  num_heads=2, num_kv_heads=2, head_dim=16, d_ff=64,
+                  vocab_size=128)
+    lane = LaneConfig(lane="elastic_zo", bp_tail_layers=1,
+                      learning_rate=5e-2, zo_eps=1e-3)
+    shape = ShapeConfig("t", seq_len=16, global_batch=2, kind="train")
+    model = api.build(cfg, shape, lane, ShardingRules(None, cfg, shape))
+    params = model.init(jax.random.key(0))
+    base_seed = jax.random.key_data(jax.random.key(1))
+
+    def batch_fn(step):
+        x, y, m = token_batch(2, 16, cfg.vocab_size, seed=1, step=step)
+        return {"tokens": jnp.asarray(x), "labels": jnp.asarray(y),
+                "mask": jnp.asarray(m)}
+
+    ref = run_fleet(model.loss_fn, params, lane, _chaos_cfg(), batch_fn,
+                    steps=STEPS, base_seed=base_seed, trace=True)
+    rec = obs.install()
+    try:
+        ins = run_fleet(model.loss_fn, params, lane, _chaos_cfg(),
+                        batch_fn, steps=STEPS, base_seed=base_seed,
+                        trace=True)
+    finally:
+        obs.uninstall()
+    _assert_streams_identical(ref, ins)
+    _assert_recorder_saw_the_fleet(rec)
+
+
+def test_int8_fleet_chaos_is_bit_exact_under_instrumentation():
+    lane = LaneConfig(lane="elastic_zo_int8", zo_num_probes=1)
+    partition = lambda p: lenet.partition_at(p, 4)          # noqa: E731
+    probe_fn = make_int8_probe_fn(lenet.lenet5_forward_int8, lane,
+                                  partition, [("fc3", "fc3_in")])
+    params = lenet.init_lenet5_int8(jax.random.key(0))
+    base_seed = jax.random.key_data(jax.random.key(1))
+
+    def batch_fn(step):
+        xs, ys = glyphs(8, seed=1, start=step * 8)
+        return {"x": quant_from_float(jnp.asarray(xs)),
+                "y": jnp.asarray(ys)}
+
+    ref = run_fleet(None, params, lane, _chaos_cfg(), batch_fn,
+                    steps=STEPS, base_seed=base_seed,
+                    partition_fn=partition, probe_fn=probe_fn, trace=True)
+    rec = obs.install()
+    try:
+        ins = run_fleet(None, params, lane, _chaos_cfg(), batch_fn,
+                        steps=STEPS, base_seed=base_seed,
+                        partition_fn=partition, probe_fn=probe_fn,
+                        trace=True)
+    finally:
+        obs.uninstall()
+    _assert_streams_identical(ref, ins)
+    _assert_recorder_saw_the_fleet(rec)
+
+
+def test_serve_trace_covers_wall_time_and_validates(tmp_path):
+    """launch/serve acceptance, pinned at the library level: a traced
+    paged run's tick spans account for >= 90% of engine wall time."""
+    cfg = reduced(ARCHS["qwen3-4b"])
+    serve = ServeConfig(page_size=8, num_pages=32, max_batch_slots=2,
+                        max_seq_len=48, max_new_tokens=6)
+    rng = np.random.default_rng(0)
+    prompts = [list(p) for p in
+               rng.integers(0, cfg.vocab_size, (2, 10)).astype(np.int32)]
+
+    rec = obs.install()
+    try:
+        eng = Engine(cfg, serve)
+        ref = eng.generate(prompts, SamplingParams(), 6)
+    finally:
+        obs.uninstall()
+
+    spans = rec.spans
+    (run_span,) = [s for s in spans if s["name"] == "serve/run"]
+    ticks = sum(s["dur"] for s in spans if s["name"] == "serve/tick")
+    coverage = ticks / run_span["dur"]
+    assert coverage >= 0.90, f"spans cover only {coverage:.1%} of wall time"
+
+    doc = chrome_trace(rec)
+    evs = validate_chrome_trace(doc)
+    assert any(e["ph"] == "X" and e["name"] == "serve/decode" for e in evs)
+    hist = rec.snapshot()["histograms"]
+    assert hist["serve.ttft_ms"]["count"] == 2           # one TTFT per req
+    assert hist["serve.decode_token_ms"]["count"] > 0
+
+    # instrumentation is inert here too: same greedy stream either way
+    eng2 = Engine(cfg, serve, params=eng.params)
+    assert eng2.generate(prompts, SamplingParams(), 6) == ref

@@ -279,6 +279,7 @@ def main(argv=None):
               f"(different models — the bytes ratio is the protocol "
               f"claim, 9/12 per probe)")
 
+    obs.memory.sample()    # reconcile fleet ledger/param tags vs jax live
     write_bench("fleet", {
         "arch": arch_name, "lane": args.lane, "workers": args.workers,
         "probes_per_worker": args.probes_per_worker, "steps": args.steps,

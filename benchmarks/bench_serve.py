@@ -42,17 +42,24 @@ def bench_one(cfg, batch: int, prompt_len: int, new_tokens: int,
     srv = DenseServer(cfg, eng.params, batch, prompt_len, new_tokens)
 
     # warm both compile caches out of the timed region — with the
-    # recorder disarmed, so compile time never pollutes the attribution
+    # recorder disarmed, so compile spans never pollute the latency
+    # attribution. The region's wall clock IS recorded (serve.compile_ms
+    # gauge + b<N>_compile_ms metric): compile time is attributed, not
+    # discarded.
     warm = [list(p) for p in prompts]
     rec = obs.get()
     if rec.enabled:
         obs.uninstall()
+    t0 = time.perf_counter()
     try:
         eng.generate(warm, SamplingParams(), new_tokens)
         srv.generate(prompts)
     finally:
+        compile_ms = (time.perf_counter() - t0) * 1e3
         if rec.enabled:
             obs.install(rec)
+            rec.gauge("serve.compile_ms").set(compile_ms)
+            rec.histogram("serve.compile_warm_ms").observe(compile_ms)
 
     t0 = time.perf_counter()
     dense = srv.generate(prompts)
@@ -68,12 +75,15 @@ def bench_one(cfg, batch: int, prompt_len: int, new_tokens: int,
     n_tok = batch * new_tokens
     assert [list(d) for d in dense] == paged, "dense/paged diverged"
     util = eng2.page_utilization()
+    eng.release_memory_tags()      # retired below; keep live bytes honest
+    eng2.release_memory_tags()
     return {
         "batch": batch,
         "prompt_len": prompt_len,
         "new_tokens": new_tokens,
         "dense_tps": n_tok / dense_dt,
         "paged_tps": n_tok / paged_dt,
+        "compile_ms": compile_ms,
         "engine_steps": eng2.steps_run,
         "total_pages": util["total_pages"],
         "page_util_peak": util["peak_util"],
@@ -105,9 +115,10 @@ def main(argv=None):
         print(f"# batch={b}: dense {r['dense_tps']:.1f} tok/s, paged "
               f"{r['paged_tps']:.1f} tok/s, peak pages "
               f"{100 * r['page_util_peak']:.0f}%", flush=True)
-        for k in ("dense_tps", "paged_tps", "engine_steps", "total_pages",
-                  "page_util_peak", "page_util_mean"):
+        for k in ("dense_tps", "paged_tps", "compile_ms", "engine_steps",
+                  "total_pages", "page_util_peak", "page_util_mean"):
             metrics[f"b{b}_{k}"] = r[k]
+    obs.memory.sample()        # reconcile serve.kv_pages/params tags
     write_bench("serve", {
         "arch": cfg.name, "batches": args.batches,
         "prompt_len": args.prompt_len, "new_tokens": args.tokens,

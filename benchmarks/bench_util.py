@@ -6,10 +6,16 @@ trajectory is diffable across PRs (one file per benchmark, committed
 runs optional, schema stable). Keep metrics flat: scalar leaves only.
 
 When the process has an armed flight recorder (repro.obs), the document
-additionally carries two attribution sections straight off the recorder
-snapshot — ``"timings"`` (span totals + latency histograms) and
-``"counters"`` (counters + gauges) — so every committed BENCH file also
-says *where* its headline numbers came from.
+additionally carries attribution sections straight off the recorder
+snapshot — ``"timings"`` (span totals + latency histograms),
+``"counters"`` (counters + gauges), and ``"memory"`` (the tagged
+live-bytes ledger, merged with any benchmark-supplied reconciliation
+dict such as run.py's measured-vs-analytic lane table) — so every
+committed BENCH file also says *where* its headline numbers came from.
+
+``benchmarks/compare.py`` is the enforcement half: it diffs a fresh
+BENCH file against the committed baseline with direction-aware
+tolerance bands and fails CI on out-of-band regressions.
 """
 from __future__ import annotations
 
@@ -20,7 +26,7 @@ REPO_ROOT = Path(__file__).resolve().parent.parent
 
 
 def write_bench(name: str, config: dict, metrics: dict,
-                out: str | None = None) -> Path:
+                out: str | None = None, memory: dict | None = None) -> Path:
     doc = {"name": name, "config": config, "metrics": metrics}
     try:
         from repro import obs
@@ -33,6 +39,10 @@ def write_bench(name: str, config: dict, metrics: dict,
                           "histograms": snap["histograms"]}
         doc["counters"] = {"counters": snap["counters"],
                            "gauges": snap["gauges"]}
+        doc["memory"] = dict(memory or {})
+        doc["memory"]["ledger"] = snap.get("memory", {})
+    elif memory:
+        doc["memory"] = dict(memory)
     path = Path(out) if out else REPO_ROOT / f"BENCH_{name}.json"
     path.write_text(json.dumps(doc, indent=2) + "\n")
     print(f"# wrote {path}")

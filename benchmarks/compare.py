@@ -1,0 +1,275 @@
+"""BENCH regression gate: diff a fresh BENCH_*.json against the
+committed baseline with direction-aware tolerance bands.
+
+``python benchmarks/compare.py BENCH_paper.json``           (self-check)
+``python benchmarks/compare.py BENCH_fresh_fleet.json --report diff.json``
+
+The baseline defaults to the committed ``BENCH_<name>.json`` at the repo
+root, resolved from the fresh document's own ``"name"`` field, so CI
+runs the bench with ``--out BENCH_fresh_<name>.json`` and compares
+against whatever is checked in.
+
+Direction-aware means each metric only fails in the direction that is a
+regression: throughput (tok/s) may rise freely but only fall so far;
+measured peak bytes may fall freely but only rise so far; deterministic
+byte/count accounting must match exactly.  Rules are first-match-wins on
+the metric name (see RULES); anything unmatched gets the default
+relative band.  Beyond metrics, the gate also checks:
+
+  * config equality — a flag change means the two runs measure different
+    things; that is exit 2 ("re-baseline"), not a pass or a regression;
+  * counters — exact (they count events, and events are deterministic);
+  * gauges — presence only (values are instantaneous and host-dependent);
+  * histograms — observation count exact, p50/p99 banded like timings,
+    raw buckets ignored;
+  * memory ledger — every tag the baseline tracked must still be tracked
+    (coverage guard; byte values are enforced via the ``memory_*``
+    metrics, not here).
+
+Exit codes: 0 in-band, 1 regression, 2 usage / config mismatch.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import re
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+# (pattern, kind, param) — first match wins, applied to the metric name.
+#   skip        informational; never fails (param: reason)
+#   exact       fresh == base (param: abs epsilon)
+#   rise_rel    higher is worse: fresh <= base * (1 + p)
+#   fall_abs    lower is worse:  fresh >= base - p
+#   higher      lower is worse:  fresh >= base / p     (throughput)
+#   lower       higher is worse: fresh <= base * p     (latency)
+#   band_abs    |fresh - base| <= max(p, |base| * frac) (param: (abs, frac))
+RULES = [
+    (r"memory_resid_", "skip", "XLA-version-dependent residual"),
+    (r"(_err(or)?($|_)|max_abs_diff)", "lower", 2.0),
+    (r"(memory_measured_.*_peak_bytes$|peak_bytes$)", "rise_rel", 0.10),
+    (r"(acc($|_|uracy)|agreement)", "fall_abs", 0.08),
+    (r"(ratio|overhead|share|util|saving|pct)", "band_abs", (0.25, 1.0)),
+    (r"(tps$|tokens_per_s)", "higher", 8.0),
+    (r"(_us$|_ms$|_s_per_step$|wall|_s$)", "lower", 8.0),
+    (r"(bytes|^n_|_n_|steps$|pages$|trials|workers|probes|^b\d+_batch)",
+     "exact", 0.0),
+    (r"loss", "band_abs", (0.1, 0.15)),
+]
+DEFAULT_RULE = ("band_abs", (1e-9, 0.25))
+
+
+def rule_for(name: str):
+    for pat, kind, param in RULES:
+        if re.search(pat, name):
+            return kind, param, pat
+    kind, param = DEFAULT_RULE
+    return kind, param, "<default>"
+
+
+def check(kind, param, base: float, fresh: float):
+    """-> (ok, bound_str) for one metric under one rule."""
+    if kind == "skip":
+        return True, param
+    if kind == "exact":
+        return math.isclose(fresh, base, rel_tol=0, abs_tol=param), \
+            f"== {base:g}"
+    if kind == "rise_rel":
+        hi = base * (1 + param) if base >= 0 else base * (1 - param)
+        return fresh <= hi, f"<= {hi:g}"
+    if kind == "fall_abs":
+        return fresh >= base - param, f">= {base - param:g}"
+    if kind == "higher":
+        lo = base / param
+        return fresh >= lo, f">= {lo:g}"
+    if kind == "lower":
+        hi = base * param
+        return fresh <= hi, f"<= {hi:g}"
+    if kind == "band_abs":
+        abs_tol, frac = param
+        tol = max(abs_tol, abs(base) * frac)
+        return abs(fresh - base) <= tol, f"± {tol:g}"
+    raise ValueError(kind)
+
+
+def load(path: Path) -> dict:
+    try:
+        return json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"compare: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def compare_metrics(base: dict, fresh: dict, rows: list) -> int:
+    bad = 0
+    for name in sorted(base):
+        kind, param, pat = rule_for(name)
+        if name not in fresh:
+            if kind == "skip":
+                continue
+            rows.append({"metric": name, "status": "MISSING",
+                         "baseline": base[name], "fresh": None,
+                         "rule": kind, "bound": "present"})
+            bad += 1
+            continue
+        b, f = base[name], fresh[name]
+        if not (isinstance(b, (int, float)) and isinstance(f, (int, float))):
+            ok, bound = b == f, "== (non-numeric)"
+        else:
+            ok, bound = check(kind, param, float(b), float(f))
+        rows.append({"metric": name, "status": "ok" if ok else "FAIL",
+                     "baseline": b, "fresh": f, "rule": kind,
+                     "bound": bound})
+        bad += 0 if ok else 1
+    for name in sorted(set(fresh) - set(base)):
+        rows.append({"metric": name, "status": "new",
+                     "baseline": None, "fresh": fresh[name],
+                     "rule": "-", "bound": "-"})
+    return bad
+
+
+def compare_attribution(base: dict, fresh: dict, rows: list) -> int:
+    """Counters exact, gauges presence, histograms count+percentiles."""
+    bad = 0
+    bc = base.get("counters", {}).get("counters", {})
+    fc = fresh.get("counters", {}).get("counters", {})
+    for name in sorted(bc):
+        if re.search(r"(_ms|_us|_ns|time|wall)", name):
+            continue                      # time-derived: informational
+        f = fc.get(name)
+        ok = f == bc[name]
+        rows.append({"metric": f"counter:{name}",
+                     "status": "ok" if ok else "FAIL",
+                     "baseline": bc[name], "fresh": f,
+                     "rule": "exact", "bound": f"== {bc[name]}"})
+        bad += 0 if ok else 1
+    bg = base.get("counters", {}).get("gauges", {})
+    fg = fresh.get("counters", {}).get("gauges", {})
+    for name in sorted(set(bg) - set(fg)):
+        rows.append({"metric": f"gauge:{name}", "status": "MISSING",
+                     "baseline": bg[name], "fresh": None,
+                     "rule": "presence", "bound": "present"})
+        bad += 1
+    bh = base.get("timings", {}).get("histograms", {})
+    fh = fresh.get("timings", {}).get("histograms", {})
+    for name in sorted(bh):
+        f = fh.get(name)
+        if f is None:
+            rows.append({"metric": f"hist:{name}", "status": "MISSING",
+                         "baseline": bh[name].get("count"), "fresh": None,
+                         "rule": "presence", "bound": "present"})
+            bad += 1
+            continue
+        ok = f.get("count") == bh[name].get("count")
+        rows.append({"metric": f"hist:{name}.count",
+                     "status": "ok" if ok else "FAIL",
+                     "baseline": bh[name].get("count"),
+                     "fresh": f.get("count"), "rule": "exact",
+                     "bound": f"== {bh[name].get('count')}"})
+        bad += 0 if ok else 1
+        for q in ("p50", "p99"):
+            b_q, f_q = bh[name].get(q), f.get(q)
+            if not (isinstance(b_q, (int, float))
+                    and isinstance(f_q, (int, float))) or b_q <= 0:
+                continue
+            ok, bound = check("lower", 8.0, float(b_q), float(f_q))
+            rows.append({"metric": f"hist:{name}.{q}",
+                         "status": "ok" if ok else "FAIL",
+                         "baseline": b_q, "fresh": f_q,
+                         "rule": "lower", "bound": bound})
+            bad += 0 if ok else 1
+    # memory ledger coverage: every tag the baseline tracked must still be
+    bt = base.get("memory", {}).get("ledger", {}).get("peak", {})
+    ft = fresh.get("memory", {}).get("ledger", {}).get("peak", {})
+    for tag in sorted(set(bt) - set(ft)):
+        rows.append({"metric": f"memtag:{tag}", "status": "MISSING",
+                     "baseline": bt[tag], "fresh": None,
+                     "rule": "presence", "bound": "present"})
+        bad += 1
+    return bad
+
+
+def print_table(rows, verbose: bool):
+    shown = [r for r in rows if verbose or r["status"] in ("FAIL", "MISSING")]
+    if not shown:
+        return
+    w = max(len(r["metric"]) for r in shown)
+
+    def fmt(v):
+        if v is None:
+            return "-"
+        if isinstance(v, float):
+            return f"{v:.6g}"
+        return str(v)
+
+    print(f"{'metric':<{w}}  {'status':<7} {'baseline':>14} "
+          f"{'fresh':>14}  rule ({'bound'})")
+    for r in shown:
+        print(f"{r['metric']:<{w}}  {r['status']:<7} "
+              f"{fmt(r['baseline']):>14} {fmt(r['fresh']):>14}  "
+              f"{r['rule']} ({r['bound']})")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh", help="freshly-produced BENCH_*.json")
+    ap.add_argument("--baseline", default="",
+                    help="baseline BENCH file (default: the committed "
+                         "BENCH_<name>.json at the repo root, <name> "
+                         "taken from the fresh document)")
+    ap.add_argument("--report", default="",
+                    help="also write the full row-by-row diff as JSON "
+                         "(CI uploads this as an artifact)")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="print every row, not just failures")
+    args = ap.parse_args(argv)
+
+    fresh_doc = load(Path(args.fresh))
+    name = fresh_doc.get("name", "")
+    base_path = Path(args.baseline) if args.baseline \
+        else REPO_ROOT / f"BENCH_{name}.json"
+    base_doc = load(base_path)
+
+    rows: list = []
+    report = {"baseline": str(base_path), "fresh": args.fresh,
+              "name": name, "rows": rows}
+
+    def finish(code: int, verdict: str) -> int:
+        report["verdict"] = verdict
+        if args.report:
+            Path(args.report).write_text(json.dumps(report, indent=2) + "\n")
+        return code
+
+    if base_doc.get("name") != name:
+        print(f"compare: baseline is '{base_doc.get('name')}' but fresh "
+              f"is '{name}' — wrong file pairing", file=sys.stderr)
+        return finish(2, "name-mismatch")
+    if base_doc.get("config") != fresh_doc.get("config"):
+        print("compare: config mismatch — the runs measure different "
+              "things. If the flag change is intentional, re-baseline "
+              f"(re-run the bench and commit the new {base_path.name}).",
+              file=sys.stderr)
+        print(f"  baseline: {json.dumps(base_doc.get('config'))}",
+              file=sys.stderr)
+        print(f"  fresh:    {json.dumps(fresh_doc.get('config'))}",
+              file=sys.stderr)
+        return finish(2, "config-mismatch")
+
+    bad = compare_metrics(base_doc.get("metrics", {}),
+                          fresh_doc.get("metrics", {}), rows)
+    bad += compare_attribution(base_doc, fresh_doc, rows)
+    print_table(rows, args.verbose)
+    n = len([r for r in rows if r["status"] != "new"])
+    if bad:
+        print(f"compare: {name}: {bad}/{n} checks OUT OF BAND vs "
+              f"{base_path.name}")
+        return finish(1, "regression")
+    print(f"compare: {name}: {n} checks in band vs {base_path.name}")
+    return finish(0, "ok")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

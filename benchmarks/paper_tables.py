@@ -34,18 +34,13 @@ def _eval_lenet(params, xs, ys):
     return float(jnp.mean((jnp.argmax(logits, -1) == ys).astype(jnp.float32)))
 
 
-def lenet_lanes(steps=600, batch=32, train_n=2048, test_n=512, seed=0,
-                lr=0.05, zo_lr=5e-3, eps=1e-2, rotate=0.0, init_params=None,
-                probes=4):
-    """Returns {lane: (test_acc, loss_curve)} for the four paper lanes."""
-    xs_tr, ys_tr = glyphs(train_n, seed=seed, rotate_deg=rotate)
-    xs_te, ys_te = glyphs(test_n, seed=seed + 1, start=10_000,
-                          rotate_deg=rotate)
-    xs_te, ys_te = jnp.asarray(xs_te), jnp.asarray(ys_te)
-    results = {}
-    # (lane name, LaneConfig, partition point C)
+def lenet_lane_configs(steps=600, lr=0.05, zo_lr=5e-3, eps=1e-2, probes=4
+                       ) -> List[Tuple[str, LaneConfig, int]]:
+    """The four paper lanes as (name, LaneConfig, partition point C) —
+    shared by the accuracy harness and the measured-memory harness so
+    the two can never drift apart."""
     dk = dict(lr_decay_factor=0.8, lr_decay_every=max(steps // 10, 1))
-    cfgs = [
+    return [
         ("full_zo", LaneConfig(lane="full_zo", learning_rate=zo_lr,
                                zo_eps=eps, zo_num_probes=probes, **dk), 5),
         ("zo_feat_cls2", LaneConfig(lane="elastic_zo", learning_rate=zo_lr,
@@ -56,6 +51,32 @@ def lenet_lanes(steps=600, batch=32, train_n=2048, test_n=512, seed=0,
                                     zo_num_probes=probes, **dk), 4),
         ("full_bp", LaneConfig(lane="full_bp", learning_rate=lr, **dk), 0),
     ]
+
+
+# INT8/INT8* lanes (Alg. 2): (name, partition point C, tail FCs)
+INT8_LANES = [
+    ("full_zo", 5, []),
+    ("zo_feat_cls2", 3, [("fc2", "fc2_in"), ("fc3", "fc3_in")]),
+    ("zo_feat_cls1", 4, [("fc3", "fc3_in")]),
+]
+
+
+def _int8_lane_cfg() -> LaneConfig:
+    return LaneConfig(int8_r_max=3, int8_p_zero=0.33, int8_b_zo=1,
+                      int8_b_bp=5)
+
+
+def lenet_lanes(steps=600, batch=32, train_n=2048, test_n=512, seed=0,
+                lr=0.05, zo_lr=5e-3, eps=1e-2, rotate=0.0, init_params=None,
+                probes=4):
+    """Returns {lane: (test_acc, loss_curve)} for the four paper lanes."""
+    xs_tr, ys_tr = glyphs(train_n, seed=seed, rotate_deg=rotate)
+    xs_te, ys_te = glyphs(test_n, seed=seed + 1, start=10_000,
+                          rotate_deg=rotate)
+    xs_te, ys_te = jnp.asarray(xs_te), jnp.asarray(ys_te)
+    results = {}
+    cfgs = lenet_lane_configs(steps=steps, lr=lr, zo_lr=zo_lr, eps=eps,
+                              probes=probes)
     for name, lane, c in cfgs:
         params = init_params or lenet.init_lenet5(jax.random.key(7))
         part = (lambda p, c=c: lenet.partition_at(p, c)) \
@@ -85,13 +106,8 @@ def lenet_int8_lanes(steps=600, batch=64, train_n=2048, test_n=512, seed=0,
     xs_te, ys_te = glyphs(test_n, seed=seed + 1, start=10_000)
     qx_te = quant_from_float(jnp.asarray(xs_te))
     results = {}
-    for name, c, tail in [
-        ("full_zo", 5, []),
-        ("zo_feat_cls2", 3, [("fc2", "fc2_in"), ("fc3", "fc3_in")]),
-        ("zo_feat_cls1", 4, [("fc3", "fc3_in")]),
-    ]:
-        lane = LaneConfig(int8_r_max=3, int8_p_zero=0.33, int8_b_zo=1,
-                          int8_b_bp=5)
+    for name, c, tail in INT8_LANES:
+        lane = _int8_lane_cfg()
         step = jax.jit(make_int8_elastic_step(
             lenet.lenet5_forward_int8,
             partition_fn=lambda p, c=c: lenet.partition_at(p, c),
@@ -231,6 +247,64 @@ def pointnet_memory_table(batch: int, num_points=1024):
             "zo_feat_cls2": {"fp32_bytes": mem(6)},
             "full_zo": {"fp32_bytes": mem(8)},
             "theta_bytes": 4 * TH, "act_bytes": 4 * A}
+
+
+# ------------------------------------------------------------------ #
+# measured memory: XLA buffer assignment per lane, next to Eqs. 2-4/13-15
+# ------------------------------------------------------------------ #
+def lenet_measured_memory(batch: int = 32) -> Dict[str, Dict[str, int]]:
+    """MEASURED per-lane step footprint for the four fp32 paper lanes.
+
+    Lowers and compiles (never runs) the exact production train step —
+    same ``make_elastic_step`` program, same state donation as the train
+    loop — and reads XLA's buffer-assignment stats
+    (core/engine.step_memory_analysis). Returns
+    {lane: {argument_bytes, output_bytes, temp_bytes, alias_bytes,
+    peak_bytes, ...}}; benchmarks/run.py places ``peak_bytes`` next to
+    ``lenet_memory_table``'s Eq. 2-4 value and reports the residual.
+    """
+    from repro.core.engine import step_memory_analysis
+    xs, ys = glyphs(batch, seed=0)
+    batch_d = {"x": jnp.asarray(xs), "y": jnp.asarray(ys)}
+    rows = {}
+    for name, lane, c in lenet_lane_configs():
+        params = lenet.init_lenet5(jax.random.key(7))
+        part = (lambda p, c=c: lenet.partition_at(p, c)) \
+            if lane.lane == "elastic_zo" else None
+        step = make_elastic_step(lenet.lenet5_loss, lane, partition_fn=part)
+        state = TrainState(params, jnp.int32(0),
+                           jax.random.key_data(jax.random.key(11)))
+        rows[name] = step_memory_analysis(
+            step, state, batch_d, np.ones((lane.zo_num_probes,), np.float32))
+    return rows
+
+
+def lenet_int8_measured_memory(batch: int = 32) -> Dict[str, Dict[str, int]]:
+    """MEASURED per-lane step footprint for the INT8/INT8* lanes (Alg. 2).
+
+    Same instrument as ``lenet_measured_memory`` over the int8 step.
+    Reconciliation caveat: this build *simulates* int8 in XLA (int8
+    storage but int32/float32 compute upcasts throughout), so the
+    measured peak lands well ABOVE Eq. 13-15 — and above the fp32 lane —
+    unlike the paper's hand-managed MCU buffers. The residual reported
+    in BENCH_paper.json quantifies exactly that simulation overhead;
+    the analytic table remains the paper-faithful number.
+    """
+    from repro.core.engine import step_memory_analysis
+    xs, ys = glyphs(batch, seed=0)
+    batch_d = {"x": quant_from_float(jnp.asarray(xs)), "y": jnp.asarray(ys)}
+    rows = {}
+    for name, c, tail in INT8_LANES:
+        step = make_int8_elastic_step(
+            lenet.lenet5_forward_int8,
+            partition_fn=lambda p, c=c: lenet.partition_at(p, c),
+            tail_fcs=tail, lane=_int8_lane_cfg(), loss_mode="int")
+        params = lenet.init_lenet5_int8(jax.random.key(7))
+        state = TrainState(params, jnp.int32(0),
+                           jax.random.key_data(jax.random.key(13)))
+        rows[name] = step_memory_analysis(step, state, batch_d,
+                                          np.ones((1,), np.float32))
+    return rows
 
 
 # ------------------------------------------------------------------ #

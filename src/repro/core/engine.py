@@ -614,3 +614,25 @@ def profile_step_phases(engine: UpdateEngine, fn: Callable, state, batch,
             return jax.tree_util.tree_leaves(engine.tail_apply(bp, g, eta))
         timed("bp_tail", jax.jit(tail_prog), bp_part, zo_part)
     return out
+
+
+# ------------------------------------------------------------------ #
+# step memory analysis (diagnostic path, opt-in)
+# ------------------------------------------------------------------ #
+def step_memory_analysis(step_fn: Callable, state, batch,
+                         probe_mask) -> Optional[Dict[str, int]]:
+    """Measured XLA footprint of ONE train step, without executing it.
+
+    The time profiler above cannot see memory and ``jax.live_arrays()``
+    cannot see inside a jitted program, so this is the measured twin of
+    the paper's analytic model (Eqs. 2-4 / 13-15): the step is lowered
+    and compiled exactly as the production path runs it (same donation)
+    and XLA's buffer assignment reports argument/output/temp/alias bytes
+    (obs/memory.compiled_footprint). benchmarks/paper_tables.py puts
+    these next to the Eq. values per lane; the difference is the
+    reconciliation residual in BENCH_paper.json's ``memory`` section.
+    """
+    from ..obs.memory import compiled_footprint
+    mask = jnp.asarray(np.asarray(probe_mask, np.float32))
+    return compiled_footprint(step_fn, state, batch, mask,
+                              donate_argnums=(0,))

@@ -346,7 +346,8 @@ def run_gossip_fleet(schema: ReplaySchema, loss_fn: Callable, params,
             raise ValueError(
                 f"step {step}: crash/partition schedule left the quorum "
                 f"component empty")
-        with rec_obs.span("gossip/step", track="fleet", step=step):
+        with rec_obs.span("gossip/step", track="fleet", step=step), \
+                rec_obs.memory.region("gossip/step"):
             arrivals = []
             with rec_obs.span("gossip/probe", track="fleet", step=step):
                 for p in active:
@@ -411,6 +412,8 @@ def run_gossip_fleet(schema: ReplaySchema, loss_fn: Callable, params,
     if not survivors:
         raise ValueError("no surviving peer completed the run")
     canon = max(survivors, key=lambda p: (p.ledger_since == 0, p.id))
+    if rec_obs.enabled:
+        obs.memory.sample()      # end-of-run tagged vs jax reconciliation
     canon.closer.events = fleet_events + canon.closer.events
     quarantine_events = canon.closer.gate.quarantine_events()
     led = canon.closer.ledger

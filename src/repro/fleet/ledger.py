@@ -58,6 +58,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from .. import obs
+
 _REC_HDR = struct.Struct("<BIBBf")        # tag, step, worker, m, loss
 _PROBE = struct.Struct("<Qf")             # seed u64, loss-diff f32
 _PROBE8 = struct.Struct("<Qb")            # seed u64, ternary g i8
@@ -240,12 +242,23 @@ class Ledger:
         self.records.setdefault(rec.step, {})[rec.worker] = rec
         self.bytes_zo += rec.zo_nbytes
         self.bytes_tail += rec.tail_nbytes
+        led = obs.get().memory
+        if led.armed:
+            # append-only by design: ledgers only ever grow, so these
+            # tags are never freed — live == cumulative appended bytes
+            # across every Ledger instance (coordinator, gossip peers,
+            # and transient replay slices alike)
+            led.alloc("fleet.ledger.zo", rec.zo_nbytes)
+            led.alloc("fleet.ledger.tail", rec.tail_nbytes)
 
     def append_commit(self, commit: Commit):
         if commit.step in self.commits:    # raise, not assert: must hold
             raise ValueError(               # under python -O too
                 f"ledger is append-only: step {commit.step} already closed")
         self.commits[commit.step] = commit
+        led = obs.get().memory
+        if led.armed:
+            led.alloc("fleet.ledger.commit", commit.nbytes)
 
     def last_step(self) -> Optional[int]:
         return max(self.commits) if self.commits else None

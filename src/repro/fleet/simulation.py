@@ -153,6 +153,11 @@ def run_fleet(loss_fn: Callable, params, lane: LaneConfig,
     dirs = worker_ckpt_dirs or [None] * fleet_cfg.num_workers
     workers = [Worker(w, params, schema, probe_fn, quantize_fn, dirs[w])
                for w in range(fleet_cfg.num_workers)]
+    rec_obs = obs.get()
+    if rec_obs.enabled:
+        rec_obs.memory.rebind("fleet.canon.params",
+                              obs.memory.tree_nbytes(coordinator.params),
+                              key=("canon", id(coordinator)))
 
     adversaries = build_adversaries(fleet_cfg)
     crash_at, restart_at = crash_schedule(fleet_cfg)
@@ -160,10 +165,10 @@ def run_fleet(loss_fn: Callable, params, lane: LaneConfig,
     masks, param_trace = [], []
     bytes_broadcast = 0
     n_catchups = 0
-    rec_obs = obs.get()
     t0 = obs.monotonic()
     for step in range(steps):
-        with rec_obs.span("fleet/step", track="fleet", step=step):
+        with rec_obs.span("fleet/step", track="fleet", step=step), \
+                rec_obs.memory.region("fleet/step"):
             for w in restart_at.get(step, []):
                 workers[w].restart(coordinator, step)
                 n_catchups += 1
@@ -216,6 +221,8 @@ def run_fleet(loss_fn: Callable, params, lane: LaneConfig,
                     f"accepted {n_acc}/{fleet_cfg.num_workers}",
                     step=s, loss=loss, accepted=n_acc)
 
+    if rec_obs.enabled:
+        obs.memory.sample()      # end-of-run tagged vs jax reconciliation
     led = coordinator.ledger
     quarantine_events = coordinator.gate.quarantine_events()
     stats = {

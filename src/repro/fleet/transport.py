@@ -88,6 +88,8 @@ class ChaosTransport:
             return False
         self.bytes_sent += record.nbytes
         rec.counter("fleet.wire.uplink_bytes").inc(record.nbytes)
+        if rec.enabled:
+            self._account_split(rec, record)
         if fate.delay > self.cfg.deadline:
             self.n_straggled += 1
             rec.counter("fleet.wire.n_straggled").inc()
@@ -104,6 +106,20 @@ class ChaosTransport:
         rec = obs.get()
         rec.counter("fleet.wire.uplink_bytes").inc(record.nbytes)
         rec.counter("fleet.wire.n_redelivered").inc()
+        if rec.enabled:
+            self._account_split(rec, record)
+
+    @staticmethod
+    def _account_split(rec, record):
+        """Split one uplink publication into its ZO and tail halves —
+        per worker for the tail, because that is where the asymmetry
+        lives: ~12 B/probe of ZO scalars vs the KBs of int8 tail payload
+        (the ROADMAP's 'tail bytes are invisible' item)."""
+        rec.counter("fleet.wire.zo_bytes").inc(record.zo_nbytes)
+        rec.counter("fleet.wire.tail_bytes").inc(record.tail_nbytes)
+        rec.counter(
+            f"fleet.wire.tail_bytes.w{record.worker:02d}").inc(
+            record.tail_nbytes)
 
     def gossip_hop(self, record):
         """Account one delivered epidemic copy of `record` over a p2p

@@ -34,6 +34,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from ..configs.base import LaneConfig
 from ..core import elastic, prng, zo
 from ..core.engine import Int8Engine
@@ -211,6 +212,16 @@ class Worker:
         self.alive = True
         self.catchup_bytes = 0
         self._pending_residual = None
+        self._tag_params()
+
+    def _tag_params(self):
+        """Re-register this device's parameter copy with the memory
+        ledger (rebind: idempotent; crash rebinds to 0, restart back)."""
+        led = obs.get().memory
+        if led.armed:
+            led.rebind("fleet.worker.params",
+                       obs.memory.tree_nbytes(self.params),
+                       key=("worker", id(self)))
 
     # ---- live path ----------------------------------------------------- #
     def compute_record(self, step: int, batch) -> Record:
@@ -249,6 +260,7 @@ class Worker:
         self.params = None
         self.residual = None
         self._pending_residual = None
+        self._tag_params()
 
     def restart(self, donor, now_step: int):
         """Catch up to `now_step` by ledger replay, not checkpoint copy.
@@ -282,4 +294,5 @@ class Worker:
         self.residual = zero_residual(self.schema)
         self.step = now_step
         self.alive = True
+        self._tag_params()
         return base_step, slice_bytes

@@ -29,12 +29,15 @@ from __future__ import annotations
 
 from .recorder import (Counter, Gauge, Histogram, NullRecorder, Recorder,
                        monotonic, perf_ns)
+from .memory import MemoryLedger, NullMemoryLedger
 from . import export
+from . import memory
 
 __all__ = ["Counter", "Gauge", "Histogram", "NullRecorder", "Recorder",
+           "MemoryLedger", "NullMemoryLedger",
            "monotonic", "perf_ns", "get", "install", "uninstall", "log",
            "set_verbosity", "get_verbosity", "add_observability_args",
-           "configure_from_args", "write_outputs", "export"]
+           "configure_from_args", "write_outputs", "export", "memory"]
 
 _NULL = NullRecorder()
 _RECORDER = _NULL
@@ -98,29 +101,34 @@ def log(channel: str, msg: str, level: str = "info", **fields):
 
 
 def add_observability_args(parser):
-    """Attach the shared --trace/--metrics/--quiet flags."""
+    """Attach the shared --trace/--metrics/--memory/--quiet flags."""
     g = parser.add_argument_group("observability")
     g.add_argument("--trace", metavar="PATH", default=None,
                    help="write a Chrome-trace/Perfetto JSON here")
     g.add_argument("--metrics", metavar="PATH", default=None,
                    help="write the metrics snapshot JSON here")
+    g.add_argument("--memory", metavar="PATH", default=None,
+                   help="write the memory-ledger report JSON here "
+                        "(tagged live/peak bytes + jax.live_arrays "
+                        "reconciliation; arms the recorder)")
     g.add_argument("--quiet", action="store_true",
                    help="suppress library progress lines on stdout")
     return parser
 
 
 def configure_from_args(args):
-    """Install a Recorder iff --trace/--metrics was passed; apply
-    --quiet. Returns the active recorder either way."""
+    """Install a Recorder iff --trace/--metrics/--memory was passed;
+    apply --quiet. Returns the active recorder either way."""
     if getattr(args, "quiet", False):
         set_verbosity("quiet")
-    if getattr(args, "trace", None) or getattr(args, "metrics", None):
+    if getattr(args, "trace", None) or getattr(args, "metrics", None) \
+            or getattr(args, "memory", None):
         return install()
     return get()
 
 
 def write_outputs(args):
-    """Flush --trace/--metrics files (no-op when flags are absent)."""
+    """Flush --trace/--metrics/--memory files (no-op when absent)."""
     rec = get()
     if not rec.enabled:
         return
@@ -130,3 +138,10 @@ def write_outputs(args):
     metrics = getattr(args, "metrics", None)
     if metrics:
         export.write_metrics(rec, metrics)
+    mem = getattr(args, "memory", None)
+    if mem:
+        memory.sample()          # final reconciliation before the dump
+        import json
+        with open(mem, "w") as f:
+            json.dump(rec.memory.snapshot(), f, indent=1, sort_keys=True)
+        log("obs", f"wrote memory ledger to {mem}")

@@ -37,6 +37,8 @@ import threading
 import time
 from typing import Any, Dict, List, Optional
 
+from .memory import MemoryLedger, NullMemoryLedger
+
 __all__ = ["Counter", "Gauge", "Histogram", "Recorder", "NullRecorder",
            "monotonic", "perf_ns"]
 
@@ -123,15 +125,22 @@ class Histogram:
                 return float(2.0 ** b) if b > -1074 else 0.0
         return self.vmax
 
-    def summary(self) -> Dict[str, float]:
+    def summary(self) -> Dict[str, Any]:
+        """Self-contained snapshot row: moments, computed percentiles,
+        AND the raw power-of-two buckets (keyed by the stringified
+        exponent so the dict survives a JSON round-trip) — a BENCH file
+        is diffable without access to the live Histogram."""
         if not self.count:
             return {"count": 0, "sum": 0.0, "min": 0.0, "max": 0.0,
-                    "mean": 0.0, "p50": 0.0, "p90": 0.0, "p99": 0.0}
+                    "mean": 0.0, "p50": 0.0, "p90": 0.0, "p99": 0.0,
+                    "buckets": {}}
         return {"count": self.count, "sum": self.total,
                 "min": self.vmin, "max": self.vmax,
                 "mean": self.total / self.count,
                 "p50": self.quantile(0.50), "p90": self.quantile(0.90),
-                "p99": self.quantile(0.99)}
+                "p99": self.quantile(0.99),
+                "buckets": {str(b): self.buckets[b]
+                            for b in sorted(self.buckets)}}
 
 
 # ------------------------------------------------------------------ #
@@ -221,6 +230,7 @@ class Recorder:
         self.t0_ns = perf_ns()
         self.spans: List[Dict[str, Any]] = []   # finished, completion order
         self.events: List[Dict[str, Any]] = []
+        self.memory = MemoryLedger()            # tagged live-bytes registry
         self._counters: Dict[str, Counter] = {}
         self._gauges: Dict[str, Gauge] = {}
         self._hists: Dict[str, Histogram] = {}
@@ -300,6 +310,7 @@ class Recorder:
             "histograms": {k: h.summary()
                            for k, h in sorted(self._hists.items())},
             "spans": self.span_totals(),
+            "memory": self.memory.snapshot(),
         }
 
     def reset(self):
@@ -311,6 +322,7 @@ class Recorder:
             self._gauges.clear()
             self._hists.clear()
             self.t0_ns = perf_ns()
+        self.memory.reset()
 
 
 class NullRecorder:
@@ -324,6 +336,7 @@ class NullRecorder:
     enabled = False
     spans: List[Dict[str, Any]] = []     # always empty; read-only views
     events: List[Dict[str, Any]] = []
+    memory = NullMemoryLedger()          # shared no-op ledger
 
     def span(self, name, track="main", **args):
         return _NULL_SPAN

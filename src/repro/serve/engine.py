@@ -96,6 +96,19 @@ class Engine:
         self.sched = Scheduler(s)
         self._prefill_cache: Dict[int, tuple] = {}
         self.steps_run = 0
+        # memory ledger: the page pool is allocated up front and lives as
+        # long as the engine — register the whole block plus the params
+        # (docs/observability.md tag catalog); per-page granularity feeds
+        # the serve.kv_pages_used_bytes gauge each tick
+        rec = obs.get()
+        self._pool_nbytes = 0
+        if rec.enabled:
+            self._pool_nbytes = obs.memory.tree_nbytes(self.caches)
+            rec.memory.rebind("serve.kv_pages", self._pool_nbytes,
+                              key=("engine", id(self)))
+            rec.memory.rebind("serve.params",
+                              obs.memory.tree_nbytes(self.params),
+                              key=("engine", id(self)))
 
     # ------------------------------------------------------------- #
     def _init_params(self, seed: int):
@@ -201,6 +214,10 @@ class Engine:
                 rec.histogram("serve.decode_token_ms").observe(
                     dsp.dur_ns / 1e6 / plan.num_active)
                 rec.counter("serve.decode_tokens").inc(plan.num_active)
+                # occupied slice of the (up-front) pool allocation
+                rec.gauge("serve.kv_pages_used_bytes").set(
+                    self._pool_nbytes * self.sched.pool.used_pages
+                    // max(self.serve.num_pages - 1, 1))
             active = list(self.sched.running)
             done = {s.req.rid for s in self.sched.commit_step(toks)}
             for seq in active:
@@ -237,6 +254,17 @@ class Engine:
         rids = [self.submit(p, sampling, max_new_tokens) for p in prompts]
         out = self.run()
         return [out[r] for r in rids]
+
+    def release_memory_tags(self):
+        """Rebind this engine's ledger registrations to zero. Call when
+        retiring an engine whose process keeps running (benchmarks build
+        several engines sequentially); live bytes otherwise keep
+        counting the dead pool."""
+        rec = obs.get()
+        if rec.enabled and self._pool_nbytes:
+            rec.memory.rebind("serve.kv_pages", 0, key=("engine", id(self)))
+            rec.memory.rebind("serve.params", 0, key=("engine", id(self)))
+            self._pool_nbytes = 0
 
     def page_utilization(self) -> Dict[str, float]:
         total = self.serve.num_pages - 1

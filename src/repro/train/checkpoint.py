@@ -40,6 +40,8 @@ import numpy as np
 
 import jax
 
+from .. import obs
+
 # npz cannot store bfloat16: persist as a uint16 view, restore from the
 # manifest's logical dtype.
 _BF16 = np.dtype(ml_dtypes.bfloat16)
@@ -123,6 +125,11 @@ def save_delta(ckpt_dir: str | Path, step: int, base_step: int,
     manifest = {"step": int(step), "mode": "delta",
                 "base_step": int(base_step), "time": time.time(),
                 "extra": extra or {}}
+    led = obs.get().memory
+    if led.armed:
+        # cumulative delta write volume — the paper's "a ledger slice IS
+        # a checkpoint" claim, in bytes
+        led.alloc("ckpt.delta", len(ledger_bytes))
     return _atomic_commit(ckpt_dir, step, manifest,
                           lambda tmp: (tmp / "ledger.bin")
                           .write_bytes(ledger_bytes))
@@ -140,12 +147,22 @@ class AsyncCheckpointer:
         self.wait()
         flat = _flatten(params)
         snapshot = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+        led = obs.get().memory
+        key = ("ckpt.pending", id(self), step)
+        if led.armed:
+            # the host snapshot is live until the writer thread is done
+            led.alloc("ckpt.pending",
+                      sum(a.nbytes for a in snapshot.values()), key=key)
 
         def _write():
-            _atomic_commit(self.dir, step,
-                           _array_manifest(step, snapshot, extra),
-                           lambda tmp: _write_arrays(tmp, snapshot))
-            self._gc()
+            try:
+                _atomic_commit(self.dir, step,
+                               _array_manifest(step, snapshot, extra),
+                               lambda tmp: _write_arrays(tmp, snapshot))
+                self._gc()
+            finally:
+                if led.armed:
+                    led.free("ckpt.pending", key=key)
 
         self._thread = threading.Thread(target=_write, daemon=True)
         self._thread.start()

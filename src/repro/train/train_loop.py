@@ -97,11 +97,20 @@ def run(step_fn: Callable, state: TrainState,
             obs.log("train", f"resumed from step {last}", step=last)
 
     rec = obs.get()
+    mem = rec.memory
+    if rec.enabled:
+        # params are rebound (donation replaces them in place each step,
+        # sizes constant); the batch is tracked per step below
+        mem.rebind("train.params", obs.memory.tree_nbytes(state.params),
+                   key=("train.params", id(cfg)))
     rng = np.random.default_rng(cfg.seed + 17)
     t0 = obs.monotonic()
     history = []
     for step in range(start, cfg.total_steps):
         batch = batch_fn(step)
+        if rec.enabled:
+            batch_nbytes = mem.alloc("train.batch",
+                                     obs.memory.tree_nbytes(batch))
         if cfg.mask_fn is not None:
             mask = np.asarray(cfg.mask_fn(step), np.float32)
         else:
@@ -114,6 +123,7 @@ def run(step_fn: Callable, state: TrainState,
             if rec.enabled:
                 jax.block_until_ready(metrics)
         if rec.enabled:
+            mem.free("train.batch", batch_nbytes)
             rec.histogram("train.step_ms").observe(sp.dur_ns / 1e6)
             toks = batch.get("tokens")      # absent for vision batches
             ntok = int(np.prod(toks.shape)) if hasattr(toks, "shape") else 0
@@ -123,6 +133,8 @@ def run(step_fn: Callable, state: TrainState,
             rec.gauge("train.loss").set(float(metrics["loss"]))
         if cfg.log_every and (step % cfg.log_every == 0
                               or step == cfg.total_steps - 1):
+            if rec.enabled:
+                obs.memory.sample()   # reconcile tagged vs jax.live_arrays
             loss = float(metrics["loss"])
             history.append((step, loss))
             dt = obs.monotonic() - t0

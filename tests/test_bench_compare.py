@@ -1,0 +1,166 @@
+"""BENCH regression gate (benchmarks/compare.py).
+
+Pins the contract CI relies on: a byte-identical rerun is in band
+(exit 0), each rule only fails in its regression direction (exit 1),
+and a config change is neither — it demands a re-baseline (exit 2).
+"""
+import copy
+import json
+
+import pytest
+
+from benchmarks.compare import main as compare
+
+BASE = {
+    "name": "t",
+    "config": {"arch": "tiny", "steps": 4},
+    "metrics": {
+        "b2_dense_tps": 100.0,
+        "fleet_wall_s_per_step": 0.5,
+        "fleet_zo_bytes_per_step": 96.0,
+        "table1_fp32_lenet_acc_full_zo": 0.8,
+        "memory_measured_lenet_b32_full_zo_peak_bytes": 3_000_000,
+        "memory_resid_lenet_b32_full_zo_bytes": 1_300_000,
+        "memory_lenet_b32_bp_over_zo": 1.85,
+        "final_loss": 2.0,
+    },
+    "counters": {"counters": {"fleet.wire.tail_bytes": 4096},
+                 "gauges": {"serve.compile_ms": 812.0}},
+    "timings": {"histograms": {"fleet.step_ms": {
+        "count": 4, "p50": 10.0, "p99": 12.0}}},
+    "memory": {"ledger": {"peak": {"fleet.ledger.zo": 96}}},
+}
+
+
+@pytest.fixture
+def files(tmp_path):
+    """-> (write_fresh, base_path): dump a doc, get its path."""
+    base_path = tmp_path / "BENCH_t.json"
+    base_path.write_text(json.dumps(BASE))
+
+    def write_fresh(doc):
+        p = tmp_path / "fresh.json"
+        p.write_text(json.dumps(doc))
+        return [str(p), "--baseline", str(base_path)]
+
+    return write_fresh, base_path
+
+
+def perturbed(**metric_updates):
+    doc = copy.deepcopy(BASE)
+    doc["metrics"].update(metric_updates)
+    return doc
+
+
+def test_identical_rerun_is_in_band(files):
+    write_fresh, _ = files
+    assert compare(write_fresh(copy.deepcopy(BASE))) == 0
+
+
+def test_throughput_only_fails_downward(files):
+    write_fresh, _ = files
+    assert compare(write_fresh(perturbed(b2_dense_tps=5.0))) == 1
+    assert compare(write_fresh(perturbed(b2_dense_tps=900.0))) == 0
+
+
+def test_latency_only_fails_upward(files):
+    write_fresh, _ = files
+    assert compare(write_fresh(perturbed(fleet_wall_s_per_step=10.0))) == 1
+    assert compare(write_fresh(perturbed(fleet_wall_s_per_step=0.01))) == 0
+
+
+def test_measured_peak_bytes_only_fail_upward(files):
+    write_fresh, _ = files
+    key = "memory_measured_lenet_b32_full_zo_peak_bytes"
+    assert compare(write_fresh(perturbed(**{key: 4_000_000}))) == 1
+    assert compare(write_fresh(perturbed(**{key: 2_000_000}))) == 0
+
+
+def test_accuracy_only_fails_downward(files):
+    write_fresh, _ = files
+    key = "table1_fp32_lenet_acc_full_zo"
+    assert compare(write_fresh(perturbed(**{key: 0.6}))) == 1
+    assert compare(write_fresh(perturbed(**{key: 0.95}))) == 0
+
+
+def test_deterministic_bytes_must_match_exactly(files):
+    write_fresh, _ = files
+    assert compare(write_fresh(perturbed(fleet_zo_bytes_per_step=97.0))) == 1
+
+
+def test_residuals_are_informational(files):
+    write_fresh, _ = files
+    key = "memory_resid_lenet_b32_full_zo_bytes"
+    assert compare(write_fresh(perturbed(**{key: -9_000_000}))) == 0
+
+
+def test_missing_metric_is_a_regression_but_new_is_not(files):
+    write_fresh, _ = files
+    doc = copy.deepcopy(BASE)
+    del doc["metrics"]["final_loss"]
+    assert compare(write_fresh(doc)) == 1
+    assert compare(write_fresh(perturbed(brand_new_metric=1.0))) == 0
+
+
+def test_counter_drift_and_missing_gauge_fail(files):
+    write_fresh, _ = files
+    doc = copy.deepcopy(BASE)
+    doc["counters"]["counters"]["fleet.wire.tail_bytes"] = 4097
+    assert compare(write_fresh(doc)) == 1
+    doc = copy.deepcopy(BASE)
+    del doc["counters"]["gauges"]["serve.compile_ms"]
+    assert compare(write_fresh(doc)) == 1
+
+
+def test_histogram_count_exact_percentiles_banded(files):
+    write_fresh, _ = files
+    doc = copy.deepcopy(BASE)
+    doc["timings"]["histograms"]["fleet.step_ms"]["count"] = 5
+    assert compare(write_fresh(doc)) == 1
+    doc = copy.deepcopy(BASE)
+    doc["timings"]["histograms"]["fleet.step_ms"]["p99"] = 200.0  # > 8x
+    assert compare(write_fresh(doc)) == 1
+    doc = copy.deepcopy(BASE)
+    doc["timings"]["histograms"]["fleet.step_ms"]["p99"] = 20.0   # in band
+    assert compare(write_fresh(doc)) == 0
+
+
+def test_dropped_memory_tag_fails_coverage(files):
+    write_fresh, _ = files
+    doc = copy.deepcopy(BASE)
+    doc["memory"]["ledger"]["peak"] = {}
+    assert compare(write_fresh(doc)) == 1
+
+
+def test_config_change_demands_rebaseline(files):
+    write_fresh, _ = files
+    doc = copy.deepcopy(BASE)
+    doc["config"]["steps"] = 8
+    assert compare(write_fresh(doc)) == 2
+
+
+def test_name_mismatch_is_usage_error(files):
+    write_fresh, _ = files
+    doc = copy.deepcopy(BASE)
+    doc["name"] = "other"
+    assert compare(write_fresh(doc)) == 2
+
+
+def test_report_artifact_written(files, tmp_path):
+    write_fresh, _ = files
+    out = tmp_path / "diff.json"
+    argv = write_fresh(perturbed(b2_dense_tps=5.0)) + ["--report", str(out)]
+    assert compare(argv) == 1
+    rep = json.loads(out.read_text())
+    assert rep["verdict"] == "regression"
+    fails = [r for r in rep["rows"] if r["status"] == "FAIL"]
+    assert fails and fails[0]["metric"] == "b2_dense_tps"
+
+
+def test_committed_baselines_self_compare(tmp_path):
+    """The acceptance gate itself: every committed BENCH file must pass
+    its own compare — otherwise CI is red on an untouched tree."""
+    from benchmarks.compare import REPO_ROOT
+
+    for p in sorted(REPO_ROOT.glob("BENCH_*.json")):
+        assert compare([str(p)]) == 0, f"{p.name} fails its own baseline"

@@ -116,6 +116,12 @@ def test_histogram_summary_and_quantiles():
     # power-of-two buckets: quantile returns the bucket's upper bound
     assert s["p50"] in (2.0, 4.0)
     assert s["p99"] == 1024.0
+    # the summary is self-contained: raw buckets ride along (keyed by
+    # stringified exponent, upper bound 2**k) so a snapshot JSON is
+    # diffable without re-deriving the layout
+    assert sum(s["buckets"].values()) == 5
+    assert all(isinstance(k, str) for k in s["buckets"])
+    assert s["buckets"]["10"] == 1          # 1000.0 lands in (512, 1024]
     # zero/negative land in the underflow bin, quantile reports 0
     h2 = rec.histogram("z")
     h2.observe(0.0)

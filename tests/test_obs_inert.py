@@ -83,6 +83,17 @@ def _assert_recorder_saw_the_fleet(rec):
     assert "worker_crash" in names and "worker_rejoin" in names
     # and the trace it exports is a loadable Chrome document
     validate_chrome_trace(chrome_trace(rec))
+    # the memory ledger rode along (armed whenever the recorder is):
+    # fleet tags carry bytes, the per-step region bracketed every step,
+    # and a reconciliation sample against jax.live_arrays() landed
+    mem = snap["memory"]
+    for tag in ("fleet.ledger.zo", "fleet.ledger.tail",
+                "fleet.ledger.commit", "fleet.worker.params",
+                "fleet.canon.params"):
+        assert mem["peak"].get(tag, 0) > 0, f"no bytes tagged under {tag}"
+    assert mem["regions"]["fleet/step"]["count"] == STEPS
+    assert mem["sample"]["jax_live_bytes"] > 0
+    assert mem["sample"]["tagged_bytes"] > 0
 
 
 def test_fp32_fleet_chaos_is_bit_exact_under_instrumentation():
@@ -171,6 +182,10 @@ def test_serve_trace_covers_wall_time_and_validates(tmp_path):
     hist = rec.snapshot()["histograms"]
     assert hist["serve.ttft_ms"]["count"] == 2           # one TTFT per req
     assert hist["serve.decode_token_ms"]["count"] > 0
+    mem = rec.snapshot()["memory"]
+    assert mem["peak"].get("serve.kv_pages", 0) > 0
+    assert mem["peak"].get("serve.params", 0) > 0
+    assert "serve.kv_pages_used_bytes" in rec.snapshot()["gauges"]
 
     # instrumentation is inert here too: same greedy stream either way
     eng2 = Engine(cfg, serve, params=eng.params)

@@ -75,7 +75,32 @@ def summarize(res, steps):
         "n_filtered_probes": s["n_filtered_probes"],
         "n_quarantines": s["n_quarantines"],
         "final_loss": res.coordinator.loss_history[-1][1],
+        **tail_wire_table(res),
     }
+
+
+def tail_wire_table(res):
+    """Per-worker BP-tail bytes the wire carried (accepted ledger records
+    only) — the ``wire.tail_bytes.w<NN>`` rows. Uneven rows localize a
+    worker whose tail payloads are dropped (chaos) or rejected
+    (Byzantine filter) without eyeballing the trace."""
+    tot: dict = {}
+    for recs in res.ledger.records.values():
+        for w, r in recs.items():
+            tot[w] = tot.get(w, 0) + r.tail_nbytes
+    return {f"wire.tail_bytes.w{w:02d}": float(v)
+            for w, v in sorted(tot.items())}
+
+
+def pop_tail_table(summary: dict, prefix: str = "") -> dict:
+    """Extract the per-worker wire table from a summarize() dict. With a
+    prefix, returns it as ``<prefix>.wire.tail_bytes.w<NN>`` metric rows;
+    without, the table is dropped (control runs)."""
+    keys = [k for k in summary if k.startswith("wire.tail_bytes.")]
+    table = {k: summary.pop(k) for k in keys}
+    if not prefix:
+        return {}
+    return {f"{prefix}.{k}": v for k, v in sorted(table.items())}
 
 
 def make_fp32_setup(args):
@@ -130,7 +155,8 @@ def bench_gossip(args, chaos, steps, star_metrics, runner, tag):
         chaos, topology="gossip",
         gossip=GossipConfig(fanout=args.gossip_fanout,
                             rounds=args.gossip_rounds))
-    g = runner(gossip)
+    g = {k: v for k, v in runner(gossip).items()
+         if not k.startswith("wire.tail_bytes.")}   # table: chaos run only
     star_wire = star_metrics["uplink_bytes_per_step"] \
         + star_metrics["broadcast_bytes_per_step"]
     gossip_wire = g["uplink_bytes_per_step"] + g["gossip_bytes_per_step"]
@@ -233,6 +259,8 @@ def main(argv=None):
                 lambda cfg: bench_fp32(setup, cfg, args.steps), "fp32")
             metrics.update({f"fleet_{k}": v for k, v in gos.items()})
         floor = args.probes_per_worker * 12
+        metrics.update(pop_tail_table(fleet, "fleet"))
+        pop_tail_table(single)             # 1-worker control: no table
         metrics.update({f"fleet_{k}": v for k, v in fleet.items()})
         metrics.update({f"single_{k}": v for k, v in single.items()})
         metrics["zo_bytes_floor_per_worker_step"] = floor
@@ -257,6 +285,7 @@ def main(argv=None):
                 lambda cfg: bench_int8(args, cfg, args.steps), "int8")
             metrics.update({f"int8_fleet_{k}": v for k, v in gos8.items()})
         floor8 = args.probes_per_worker * 9
+        metrics.update(pop_tail_table(i8, "int8_fleet"))
         metrics.update({f"int8_fleet_{k}": v for k, v in i8.items()})
         metrics["int8_zo_bytes_floor_per_worker_step"] = floor8
         metrics["int8_zo_bytes_overhead_ratio"] = \

@@ -24,7 +24,10 @@ relative band.  Beyond metrics, the gate also checks:
     raw buckets ignored;
   * memory ledger — every tag the baseline tracked must still be tracked
     (coverage guard; byte values are enforced via the ``memory_*``
-    metrics, not here).
+    metrics, not here);
+  * cross-metric invariants (CROSS_RULES) — hard inequalities checked
+    inside the fresh document alone (e.g. serve's paged throughput must
+    beat dense at batch 4), so they can never be re-baselined away.
 
 Exit codes: 0 in-band, 1 regression, 2 usage / config mismatch.
 """
@@ -60,6 +63,15 @@ RULES = [
     (r"loss", "band_abs", (0.1, 0.15)),
 ]
 DEFAULT_RULE = ("band_abs", (1e-9, 0.25))
+
+# Cross-metric rules, keyed on the document name: (lhs, rhs) means the
+# fresh document must satisfy lhs >= rhs *within itself* — no baseline
+# involved, so drift can never re-baseline its way past the invariant.
+# The serve rule is the paged-serving acceptance bar: continuous batching
+# must beat the dense static-batch path at the CI matrix's batch 4.
+CROSS_RULES = {
+    "serve": [("b4_paged_tps", "b4_dense_tps")],
+}
 
 
 def rule_for(name: str):
@@ -128,6 +140,28 @@ def compare_metrics(base: dict, fresh: dict, rows: list) -> int:
         rows.append({"metric": name, "status": "new",
                      "baseline": None, "fresh": fresh[name],
                      "rule": "-", "bound": "-"})
+    return bad
+
+
+def compare_cross(name: str, fresh: dict, rows: list) -> int:
+    """Fresh-doc-internal invariants (CROSS_RULES): lhs >= rhs, hard."""
+    bad = 0
+    for lhs, rhs in CROSS_RULES.get(name, []):
+        f_l, f_r = fresh.get(lhs), fresh.get(rhs)
+        if not (isinstance(f_l, (int, float))
+                and isinstance(f_r, (int, float))):
+            rows.append({"metric": f"cross:{lhs}>={rhs}",
+                         "status": "MISSING", "baseline": None,
+                         "fresh": None, "rule": "cross",
+                         "bound": "both present"})
+            bad += 1
+            continue
+        ok = f_l >= f_r
+        rows.append({"metric": f"cross:{lhs}>={rhs}",
+                     "status": "ok" if ok else "FAIL",
+                     "baseline": f_r, "fresh": f_l, "rule": "cross",
+                     "bound": f">= {f_r:g}"})
+        bad += 0 if ok else 1
     return bad
 
 
@@ -260,6 +294,7 @@ def main(argv=None) -> int:
 
     bad = compare_metrics(base_doc.get("metrics", {}),
                           fresh_doc.get("metrics", {}), rows)
+    bad += compare_cross(name, fresh_doc.get("metrics", {}), rows)
     bad += compare_attribution(base_doc, fresh_doc, rows)
     print_table(rows, args.verbose)
     n = len([r for r in rows if r["status"] != "new"])

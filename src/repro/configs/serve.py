@@ -20,6 +20,9 @@ class ServeConfig:
     bucket_prompts: bool = False  # pow2 prompt-length bucketing (attn-only
     #                               archs; SSM state would absorb pad tokens)
     eos_id: int = -1             # -1: never stop early
+    megastep: int = 32           # max decode ticks fused into one device
+    #                              call while the plan is provably steady
+    #                              (Scheduler.steady_horizon); 1 disables
 
     @property
     def max_pages_per_seq(self) -> int:

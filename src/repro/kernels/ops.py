@@ -14,7 +14,8 @@ import jax.numpy as jnp
 
 from . import ref
 from .int8_matmul import int8_matmul as _pallas_int8_matmul
-from .paged_attn import paged_attention as _pallas_paged_attention
+from .paged_attn import paged_attention_step as _pallas_paged_attention_step
+from .topk_mask import topk_topp_mask as _pallas_topk_topp_mask
 from .zo_fused_replay import zo_fused_replay as _pallas_zo_fused_replay
 from .zo_fused_replay import \
     zo_fused_replay_int8 as _pallas_zo_fused_replay_int8
@@ -91,17 +92,40 @@ def int8_perturb(theta, seed, salt: int, k, r_max, p_zero, *,
     return ref.int8_perturb_ref(theta, seed, salt, int(k), int(r_max), p_zero)
 
 
-def paged_attention(q, k_pool, v_pool, page_table, seq_lens, *, scale,
-                    window: int = 0, force_pallas: bool = False,
-                    interpret: bool = False):
-    """Paged decode attention — Pallas on TPU, gather+dense ref elsewhere.
+def paged_attention_step(q, k_new, v_new, k_pool, v_pool, page_table,
+                         seq_lens, *, scale, window: int = 0,
+                         force_pallas: bool = False,
+                         interpret: bool = False):
+    """Fused paged decode megastep — Pallas on TPU, write+gather+dense ref
+    elsewhere. Returns (o, k_pool, v_pool): the token's K/V write rides
+    inside the step (in-place via input_output_aliases on TPU), so callers
+    never scatter into the pool themselves.
 
-    The ref path is bitwise the dense decode attention (see ref.paged_attn_ref)
-    so CPU serve output is exactly comparable to the dense cache path.
+    The ref path is bitwise the dense decode attention (see
+    ref.paged_attn_step_ref) so CPU serve output is exactly comparable to
+    the dense cache path.
     """
     if _on_tpu() or force_pallas:
-        return _pallas_paged_attention(q, k_pool, v_pool, page_table,
-                                       seq_lens, scale=scale, window=window,
-                                       interpret=interpret)
-    return ref.paged_attn_ref(q, k_pool, v_pool, page_table, seq_lens,
-                              scale=scale, window=window)
+        return _pallas_paged_attention_step(
+            q, k_new, v_new, k_pool, v_pool, page_table, seq_lens,
+            scale=scale, window=window, interpret=interpret)
+    return ref.paged_attn_step_ref(q, k_new, v_new, k_pool, v_pool,
+                                   page_table, seq_lens, scale=scale,
+                                   window=window)
+
+
+def topk_topp_mask(logits, k, p, *, force_pallas: bool = False,
+                   interpret: bool = False):
+    """Sort-free top-k/top-p logit filter (threshold-refine selection).
+
+    logits [B, V] f32; k [B] int32 (<=0 disables); p [B] f32 (>=1
+    disables). Returns logits with filtered entries at NEG_INF. Pallas on
+    TPU, jnp radix ref elsewhere — both replace the sampler's two
+    full-vocab argsorts with a 4-round byte-radix descent; see
+    ref.topk_topp_mask_ref for the keep-set contract and the one
+    boundary-rounding caveat vs. the full-sort reference.
+    """
+    if _on_tpu() or force_pallas:
+        return _pallas_topk_topp_mask(logits, k, p, interpret=interpret)
+    return ref.topk_topp_mask_ref(logits, jnp.asarray(k, jnp.int32),
+                                  jnp.asarray(p, jnp.float32))

@@ -1,27 +1,38 @@
-"""Pallas TPU paged-attention decode kernel (vLLM-style block tables).
+"""Pallas TPU fused paged-attention decode megastep (vLLM-style tables).
 
-Single-token decode over a paged KV pool: each sequence's cache lives in
-fixed-size pages scattered through a global pool, addressed by a per-row
-page table. The kernel never materializes the gathered [B, T, KVd, Dh]
-cache — pages stream HBM->VMEM one at a time via scalar-prefetched block
-indexing (``PrefetchScalarGridSpec``: the page table is available before
-the body runs, so the k/v ``index_map`` picks the *physical* page for each
-logical block), and the online-softmax accumulator stays resident in VMEM.
+One kernel call per decode step does BOTH halves of the token's cache
+traffic:
+
+  1. **fused KV write** — the incoming token's K/V row is DMA'd straight
+     into its pool slot (``page_table[b, pos // ps], pos % ps``) before any
+     page is read, so the pool-wide ``k_pool.at[pidx, slot].set`` scatter
+     that used to run in models/layers.py (forcing XLA to copy/alias-check
+     the whole pool every token) disappears; the pools are
+     ``input_output_aliases``-donated and updated in place;
+  2. **megastep attention** — pages stream HBM->VMEM ``pages_per_block``
+     at a time through double-width VMEM scratch, and every KV head is
+     batched into one ``[KVd*G, Dh]`` accumulator tile per row, so the MXU
+     sees one tall tile instead of KVd skinny ``[G, Dh]`` ones and the
+     grid drops from (B, KVd, P) to (B, ceil(P / F)).
 
 Layouts:
   q          [B, KVd, G, Dh]     (G = query heads per KV head)
-  k/v pool   [N_pages, page_size, KVd, Dh]
+  k/v new    [B, KVd, Dh]        current token's K/V (pool dtype)
+  k/v pool   [N_pages, page_size, KVd, Dh]   (ANY/HBM; aliased outputs)
   page_table [B, P] int32        (P = max pages per sequence; 0 = null page)
-  seq_lens   [B] int32           (tokens already written, incl. current)
+  seq_lens   [B] int32           (tokens already cached == write position)
 
-Grid (B, KVd, P): the page loop is innermost so the [G, Dh] accumulator
-tile survives across pages (same pattern as flash_attn.py). Pages whose
-first position is past seq_lens[b] are skipped with ``pl.when`` — their
-table entries point at the null page and are never read.
+The page table and seq_lens ride as scalar-prefetch operands
+(``PrefetchScalarGridSpec``) so physical page ids are known before the
+body runs. A page block is skipped — no DMA, no FLOPs — when it starts
+past ``seq_lens[b]`` or its table entry is the **null page** (entry 0):
+that is how SWA reclamation works, the scheduler re-nulls fully
+windowed-out entries after freeing their pages and the kernel never
+touches them again.
 
-TPU efficiency notes: Dh should be 64/128 and G padded toward the 8-sublane
-tile for MXU occupancy; CPU tests run ``interpret=True`` where the tiling
-constraints are relaxed.
+TPU efficiency notes: Dh should be 64/128 and KVd*G padded toward the
+8-sublane tile; CPU tests run ``interpret=True`` where tiling constraints
+are relaxed.
 """
 from __future__ import annotations
 
@@ -34,33 +45,78 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+NULL_PAGE = 0
 
 
-def _kernel(pt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref,
-            acc_ref, m_ref, l_ref, *, scale, window, page_size):
+def _kernel(pt_ref, sl_ref, q_ref, knew_ref, vnew_ref, kpool_in, vpool_in,
+            o_ref, kpool_ref, vpool_ref, k_vmem, v_vmem, acc_ref, m_ref,
+            l_ref, ksem, vsem, wsem, *, scale, window, page_size, f_pages):
     b = pl.program_id(0)
-    p = pl.program_id(2)
+    pb = pl.program_id(1)
+    ps = page_size
+    pos = sl_ref[b]                          # current absolute position
 
-    @pl.when(p == 0)
+    @pl.when(pb == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
+        # fused KV write: land the incoming token in its slot before any
+        # page read. Inactive rows (seq_len 0, all-null table) write into
+        # the reserved null page, which is never attended.
+        wpage = pt_ref[b, pos // ps]
+        wslot = pos % ps
+        kcp = pltpu.make_async_copy(
+            knew_ref.at[b], kpool_ref.at[wpage, wslot], wsem.at[0])
+        vcp = pltpu.make_async_copy(
+            vnew_ref.at[b], vpool_ref.at[wpage, wslot], wsem.at[1])
+        kcp.start()
+        vcp.start()
+        kcp.wait()
+        vcp.wait()
 
-    pos = sl_ref[b]                         # current absolute position
+    base = pb * f_pages
+    phys = [pt_ref[b, base + j] for j in range(f_pages)]
+    live = [(jnp.int32((base + j) * ps) <= pos) & (phys[j] != NULL_PAGE)
+            for j in range(f_pages)]
+    for j in range(f_pages):
+        @pl.when(live[j])
+        def _copy(j=j):
+            pltpu.make_async_copy(
+                kpool_ref.at[phys[j]], k_vmem.at[j], ksem.at[j]).start()
+            pltpu.make_async_copy(
+                vpool_ref.at[phys[j]], v_vmem.at[j], vsem.at[j]).start()
+    for j in range(f_pages):
+        @pl.when(live[j])
+        def _wait(j=j):
+            pltpu.make_async_copy(
+                kpool_ref.at[phys[j]], k_vmem.at[j], ksem.at[j]).wait()
+            pltpu.make_async_copy(
+                vpool_ref.at[phys[j]], v_vmem.at[j], vsem.at[j]).wait()
 
-    @pl.when(p * page_size <= pos)          # page holds a live position
+    @pl.when(jnp.int32(base * ps) <= pos)    # block holds a live position
     def _attend():
-        q = q_ref[0, 0].astype(jnp.float32)                 # [G, Dh]
-        k = k_ref[0, :, 0, :].astype(jnp.float32)           # [ps, Dh]
-        v = v_ref[0, :, 0, :].astype(jnp.float32)           # [ps, Dh]
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32) * scale
-        t = p * page_size + jax.lax.broadcasted_iota(
+        KVd, G, Dh = q_ref.shape[1], q_ref.shape[2], q_ref.shape[3]
+        T = f_pages * ps
+        q = q_ref[0].astype(jnp.float32)                    # [KVd, G, Dh]
+        page_ok = jnp.repeat(jnp.stack(live), ps)           # [T] bool
+        k = k_vmem[...].astype(jnp.float32).reshape(T, KVd, Dh)
+        v = v_vmem[...].astype(jnp.float32).reshape(T, KVd, Dh)
+        # dead pages inside a live block hold stale scratch; their softmax
+        # weight is exactly 0, but 0 * garbage(NaN) would still poison the
+        # weighted-value dot — select them to 0 before contracting.
+        v = jnp.where(page_ok[:, None, None], v, 0.0)
+        # head-batched scores: one [KVd*G, T] tile, head-major rows
+        s = jnp.concatenate([
+            jax.lax.dot_general(q[h], k[:, h, :], (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+            for h in range(KVd)], axis=0) * scale           # [KVd*G, T]
+        t = jnp.int32(base * ps) + jax.lax.broadcasted_iota(
             jnp.int32, s.shape, 1)
         mask = t <= pos
         if window > 0:
             mask &= t > pos - window
+        mask &= page_ok[None, :]
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_ref[...]
@@ -68,51 +124,87 @@ def _kernel(pt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref,
         p_ = jnp.exp(s - m_new)
         alpha = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * alpha + jnp.sum(p_, axis=1, keepdims=True)
-        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-            p_, v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
+        pv = jnp.concatenate([
+            jax.lax.dot_general(p_[h * G:(h + 1) * G], v[:, h, :],
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+            for h in range(KVd)], axis=0)                   # [KVd*G, Dh]
+        acc_ref[...] = acc_ref[...] * alpha + pv
         m_ref[...] = m_new
 
-    @pl.when(p == pl.num_programs(2) - 1)
+    @pl.when(pb == pl.num_programs(1) - 1)
     def _done():
-        o_ref[0, 0] = (acc_ref[...] /
-                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+        KVd, G, Dh = o_ref.shape[1], o_ref.shape[2], o_ref.shape[3]
+        o = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = o.reshape(KVd, G, Dh).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "window", "interpret"))
-def paged_attention(q, k_pool, v_pool, page_table, seq_lens, *,
-                    scale: float | None = None, window: int = 0,
-                    interpret: bool = False):
-    """q [B,KVd,G,Dh] x paged pools -> o [B,KVd,G,Dh]."""
+def default_pages_per_block(page_size: int, table_width: int) -> int:
+    """Pages streamed per grid step: aim for a >=128-position KV tile."""
+    return max(1, min(table_width, -(-128 // page_size)))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "window", "pages_per_block", "interpret"))
+def paged_attention_step(q, k_new, v_new, k_pool, v_pool, page_table,
+                         seq_lens, *, scale: float | None = None,
+                         window: int = 0, pages_per_block: int = 0,
+                         interpret: bool = False):
+    """Fused decode megastep: write the token's K/V, attend through pages.
+
+    q [B,KVd,G,Dh], k_new/v_new [B,KVd,Dh] (pool dtype) ->
+    (o [B,KVd,G,Dh], k_pool, v_pool) with the pools updated in place
+    (input_output_aliases; callers should treat the inputs as donated).
+    """
     B, KVd, G, Dh = q.shape
     _, page_size, _, _ = k_pool.shape
     P = page_table.shape[1]
     scale = scale if scale is not None else 1.0 / math.sqrt(Dh)
+    F = pages_per_block or default_pages_per_block(page_size, P)
+    F = min(F, P)
+    PB = -(-P // F)
+    if PB * F != P:       # pad the table with null pages (always skipped)
+        page_table = jnp.pad(page_table, ((0, 0), (0, PB * F - P)),
+                             constant_values=NULL_PAGE)
     kern = functools.partial(_kernel, scale=scale, window=window,
-                             page_size=page_size)
+                             page_size=page_size, f_pages=F)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(B, KVd, P),
+        grid=(B, PB),
         in_specs=[
-            pl.BlockSpec((1, 1, G, Dh),
-                         lambda b, h, p, pt, sl: (b, h, 0, 0)),
-            pl.BlockSpec((1, page_size, 1, Dh),
-                         lambda b, h, p, pt, sl: (pt[b, p], 0, h, 0)),
-            pl.BlockSpec((1, page_size, 1, Dh),
-                         lambda b, h, p, pt, sl: (pt[b, p], 0, h, 0)),
+            pl.BlockSpec((1, KVd, G, Dh), lambda b, p, pt, sl: (b, 0, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),      # k_new
+            pl.BlockSpec(memory_space=pltpu.ANY),      # v_new
+            pl.BlockSpec(memory_space=pltpu.ANY),      # k_pool
+            pl.BlockSpec(memory_space=pltpu.ANY),      # v_pool
         ],
-        out_specs=pl.BlockSpec((1, 1, G, Dh),
-                               lambda b, h, p, pt, sl: (b, h, 0, 0)),
+        out_specs=[
+            pl.BlockSpec((1, KVd, G, Dh), lambda b, p, pt, sl: (b, 0, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
         scratch_shapes=[
-            pltpu.VMEM((G, Dh), jnp.float32),
-            pltpu.VMEM((G, 1), jnp.float32),
-            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((F, page_size, KVd, Dh), k_pool.dtype),
+            pltpu.VMEM((F, page_size, KVd, Dh), v_pool.dtype),
+            pltpu.VMEM((KVd * G, Dh), jnp.float32),
+            pltpu.VMEM((KVd * G, 1), jnp.float32),
+            pltpu.VMEM((KVd * G, 1), jnp.float32),
+            pltpu.SemaphoreType.DMA((F,)),
+            pltpu.SemaphoreType.DMA((F,)),
+            pltpu.SemaphoreType.DMA((2,)),
         ],
     )
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, KVd, G, Dh), q.dtype),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KVd, G, Dh), q.dtype),
+            jax.ShapeDtypeStruct(k_pool.shape, k_pool.dtype),
+            jax.ShapeDtypeStruct(v_pool.shape, v_pool.dtype),
+        ],
+        input_output_aliases={5: 1, 6: 2},
         interpret=interpret,
     )(page_table.astype(jnp.int32), seq_lens.astype(jnp.int32),
-      q, k_pool, v_pool)
+      q, k_new.astype(k_pool.dtype), v_new.astype(v_pool.dtype),
+      k_pool, v_pool)

@@ -1,0 +1,109 @@
+"""Pallas TPU sort-free top-k/top-p filter (threshold-refine selection).
+
+One grid step per batch row: the row's logits live in VMEM and the
+4-round byte-radix descent of kernels/ref.py::topk_topp_mask_ref runs
+in-kernel — histograms are built by chunked bucket-compare reductions
+(no scatter, which the TPU vector unit lacks), so a 128k vocab costs
+4 passes of O(V) work per filter instead of two full-vocab sorts.
+
+k and p ride as scalar-prefetch operands (per-row knobs, SMEM-resident
+before the body runs). Keep semantics are identical to the jnp ref —
+see its docstring for the tie-splitting and boundary-rounding contract.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+_HIST_CHUNK = 4096
+
+
+def _key(x):
+    """float32 -> uint32 monotone key (-0.0 canonicalized to +0.0)."""
+    x = x.astype(jnp.float32) + jnp.float32(0.0)
+    s = jax.lax.bitcast_convert_type(x, jnp.int32)
+    u = s.astype(jnp.uint32)
+    return jnp.where(s < 0, ~u, u | jnp.uint32(0x80000000))
+
+
+def _hist(byte, weights):
+    """[V] int32 bucket ids x [V] weights -> [256] sums, chunked so the
+    bucket-compare matrix never exceeds 256 x _HIST_CHUNK in VMEM."""
+    V = byte.shape[0]
+    out = jnp.zeros((256,), weights.dtype)
+    for c in range(0, V, _HIST_CHUNK):
+        n = min(_HIST_CHUNK, V - c)
+        buckets = jax.lax.broadcasted_iota(jnp.int32, (256, n), 0)
+        eq = byte[c:c + n][None, :] == buckets
+        out = out + jnp.where(eq, weights[c:c + n][None, :], 0).sum(axis=1)
+    return out
+
+
+def _kernel(k_ref, p_ref, x_ref, o_ref):
+    b = pl.program_id(0)
+    x = x_ref[0]                                   # [V]
+    V = x.shape[0]
+    k = k_ref[b]
+    p = p_ref[b]
+
+    # ---- top-k: radix-select the exact k-th largest key ---------- #
+    keys = _key(x)
+    krem = jnp.clip(k, 1, V).astype(jnp.int32)
+    cand = jnp.ones((V,), jnp.int32)
+    kth = jnp.uint32(0)
+    for shift in (24, 16, 8, 0):
+        byte = ((keys >> shift) & jnp.uint32(0xFF)).astype(jnp.int32)
+        hist = _hist(byte, cand)
+        cnt_ge = jnp.cumsum(hist[::-1])[::-1]
+        above = cnt_ge - hist
+        cond = (above < krem) & (cnt_ge >= krem)
+        j = jnp.argmax(cond).astype(jnp.int32)
+        krem = krem - above[j]
+        kth = kth | (j.astype(jnp.uint32) << shift)
+        cand = cand * (byte == j)
+    xk = jnp.where((keys >= kth) | (k <= 0), x, NEG_INF)
+
+    # ---- top-p: refine the nucleus boundary value ---------------- #
+    probs = jax.nn.softmax(xk)
+    keys = _key(xk)
+    cand_m = jnp.ones((V,), jnp.float32)
+    above_mass = jnp.float32(0.0)
+    tkey = jnp.uint32(0)
+    for shift in (24, 16, 8, 0):
+        byte = ((keys >> shift) & jnp.uint32(0xFF)).astype(jnp.int32)
+        mh = _hist(byte, probs * cand_m)
+        above = jnp.cumsum(mh[::-1])[::-1] - mh + above_mass
+        cond = above < p
+        j = jnp.argmax(cond).astype(jnp.int32)
+        above_mass = above[j]
+        tkey = tkey | (j.astype(jnp.uint32) << shift)
+        cand_m = cand_m * (byte == j)
+    eq = keys == tkey
+    p_t = jnp.max(jnp.where(eq, probs, 0.0))
+    r = jnp.cumsum(eq.astype(jnp.int32)) - eq      # tie rank, index order
+    keep = (keys > tkey) | (eq & (above_mass + r * p_t < p)) | (p >= 1.0)
+    o_ref[0] = jnp.where(keep, xk, NEG_INF)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def topk_topp_mask(logits, k, p, *, interpret: bool = False):
+    """logits [B, V] f32, k [B] int32, p [B] f32 -> masked logits [B, V]."""
+    B, V = logits.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, V), lambda b, k, p: (b, 0))],
+        out_specs=pl.BlockSpec((1, V), lambda b, k, p: (b, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, V), jnp.float32),
+        interpret=interpret,
+    )(k.astype(jnp.int32), p.astype(jnp.float32),
+      logits.astype(jnp.float32))

@@ -188,17 +188,14 @@ def attention(p, x, cfg: ModelConfig, rules, positions,
         from ..kernels import ops
         page_table, seq_lens = paged
         k_pool, v_pool = cache
-        ps = k_pool.shape[1]
         pos = seq_lens.astype(jnp.int32)                      # [B]
-        pidx = jnp.take_along_axis(page_table, (pos // ps)[:, None],
-                                   axis=1)[:, 0]
-        slot = pos % ps
-        # inactive rows (seq_len 0, table all-null) land in the reserved
-        # null page; it is never mapped, so the garbage is never read.
-        k_pool = k_pool.at[pidx, slot].set(k[:, 0].astype(k_pool.dtype))
-        v_pool = v_pool.at[pidx, slot].set(v[:, 0].astype(v_pool.dtype))
-        y = ops.paged_attention(q[:, 0], k_pool, v_pool, page_table, pos,
-                                scale=scale, window=window)[:, None]
+        # the token's K/V write is fused into the megastep (inactive rows
+        # — seq_len 0, table all-null — land in the reserved null page,
+        # which is never attended), so no pool-wide scatter happens here.
+        y, k_pool, v_pool = ops.paged_attention_step(
+            q[:, 0], k[:, 0], v[:, 0], k_pool, v_pool, page_table, pos,
+            scale=scale, window=window)
+        y = y[:, None]
         new_cache = (k_pool, v_pool)
     elif cache is not None:
         k_cache, v_cache = cache

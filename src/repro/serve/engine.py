@@ -2,14 +2,19 @@
 
 One ``Engine.step()`` is one scheduler iteration:
 
-  1. admit waiting requests (prefill each at its prompt length, sample the
-     first token from the prefill logits, scatter the dense prompt KV into
-     freshly allocated pages, write recurrent state into the batch slot);
+  1. admit waiting requests as a wave: ONE batched prefill + ONE pool
+     scatter per distinct (bucketed) prompt length, then one batched call
+     sampling every admission's first token (recurrent state goes into
+     the batch slots);
   2. assemble the step (page table + seq lens + per-row sampling knobs),
      preempting newest-first if the pool can't grow someone's cache;
-  3. run one fused paged decode step over all slots and sample;
-  4. commit tokens, emitting stream events and evicting finished
-     sequences (their pages return to the pool immediately).
+  3. ask the scheduler how many ticks the plan is provably stable for
+     (``Scheduler.steady_horizon``) and run that many fused decode+sample
+     ticks in ONE device call (``_megastep`` — a ``lax.scan`` whose carry
+     feeds each tick's sampled tokens into the next decode on device);
+  4. commit the megastep's tokens tick by tick, emitting stream events
+     and evicting finished sequences (their pages return to the pool
+     immediately).
 
 Prefill compiles per distinct prompt length; ``ServeConfig.bucket_prompts``
 buckets lengths to powers of two for attention-only archs (right-padding
@@ -75,10 +80,15 @@ class Engine:
         self.lane = lane or LaneConfig()
         self.detok = detok or _default_detok
         s = self.serve
-        if s.max_pages_per_seq > s.num_pages - 1:
+        worst = s.max_pages_per_seq
+        if cfg.sliding_window:
+            # SWA reclamation bounds a sequence's footprint by its window
+            # (scheduler._worst_case_pages), not by max_seq_len
+            worst = min(worst, s.pages_for(cfg.sliding_window) + 1)
+        if worst > s.num_pages - 1:
             raise ValueError(
                 f"pool of {s.num_pages - 1} usable pages cannot hold one "
-                f"max-length sequence ({s.max_pages_per_seq} pages); raise "
+                f"max-length sequence ({worst} pages); raise "
                 f"num_pages or lower max_seq_len")
         self._attn_only = all(k == ATTN for k in cfg.pattern)
 
@@ -88,13 +98,29 @@ class Engine:
         self._md = api.build(cfg, dshape, self.lane, self._drules)
         self._decode = jax.jit(self._md.decode_step_paged,
                                donate_argnums=(2,))
+        # multi-tick megastep: `horizon` decode+sample ticks fused into one
+        # device call (lax.scan), legal whenever the scheduler proves the
+        # plan epoch-stable that long (Scheduler.steady_horizon). Amortizes
+        # per-call dispatch exactly like the dense baseline's tight loop —
+        # but over fewer, bigger calls. Compiles per (horizon, greedy).
+        self._fused = jax.jit(self._megastep,
+                              static_argnames=("horizon", "greedy"),
+                              donate_argnums=(1,))
         self.params = params if params is not None \
             else self._init_params(init_seed)
         raw = make_paged_caches(cfg, s.max_batch_slots, s.num_pages,
                                 s.page_size, self._drules)
         self.caches = api.split_caches(raw, cfg, self.lane)
-        self.sched = Scheduler(s)
+        self.sched = Scheduler(s, window=cfg.sliding_window or 0)
         self._prefill_cache: Dict[int, tuple] = {}
+        # persistent device-side step plan, keyed on the scheduler's
+        # plan_epoch: in steady state (no admissions/evictions/page moves)
+        # the next tick's plan is this tick's advanced on device — tokens
+        # are the sampler output, pos/sample-index bump by the active
+        # mask — so the host uploads nothing and the only device<->host
+        # traffic per token is the single sampled-token download
+        self._dev_plan: Optional[Dict[str, jax.Array]] = None
+        self._host_plan: Dict[str, np.ndarray] = {}   # last-uploaded bytes
         self.steps_run = 0
         # memory ledger: the page pool is allocated up front and lives as
         # long as the engine — register the whole block plus the params
@@ -118,18 +144,19 @@ class Engine:
                       ShardingRules(None, self.cfg, pshape))
         return m.init(jax.random.key(seed))
 
-    def _get_prefill(self, s_tok: int):
-        """(BuiltModel, jitted prefill_logits) for a prompt of s_tok text
-        tokens (caches compile per distinct length; bucketing bounds the
-        number of distinct lengths)."""
-        if s_tok not in self._prefill_cache:
+    def _get_prefill(self, s_tok: int, nb: int = 1):
+        """(BuiltModel, jitted prefill_logits) for `nb` prompts of s_tok
+        text tokens each (caches compile per distinct (length, wave size);
+        bucketing bounds the number of distinct lengths, max_batch_slots
+        bounds the wave sizes)."""
+        if (s_tok, nb) not in self._prefill_cache:
             seq_len = s_tok + self.cfg.num_image_tokens
-            shape = ShapeConfig(f"serve_p{s_tok}", seq_len=seq_len,
-                                global_batch=1, kind="prefill")
+            shape = ShapeConfig(f"serve_p{s_tok}x{nb}", seq_len=seq_len,
+                                global_batch=nb, kind="prefill")
             m = api.build(self.cfg, shape, self.lane,
                           ShardingRules(None, self.cfg, shape))
-            self._prefill_cache[s_tok] = (m, jax.jit(m.prefill_logits))
-        return self._prefill_cache[s_tok]
+            self._prefill_cache[(s_tok, nb)] = (m, jax.jit(m.prefill_logits))
+        return self._prefill_cache[(s_tok, nb)]
 
     # ------------------------------------------------------------- #
     def submit(self, prompt: Seq[int],
@@ -139,45 +166,138 @@ class Engine:
                                  max_new_tokens,
                                  prefix_extra=self.cfg.num_image_tokens)
 
-    def _sample_row(self, logits, seq):
-        sp = seq.req.sampling
-        return int(np.asarray(sampler.sample_tokens(
-            logits,
-            jnp.asarray([sp.temperature], jnp.float32),
-            jnp.asarray([sp.top_k], jnp.int32),
-            jnp.asarray([sp.top_p], jnp.float32),
-            jnp.asarray([np.uint32(sp.seed)], jnp.uint32),
-            jnp.asarray([len(seq.generated)], jnp.int32),
-            vocab_size=self.cfg.vocab_size))[0])
+    def _sample_admitted(self, seqs, logits_parts,
+                         events: List[StreamEvent]) -> None:
+        """Sample the first token of every admission in ONE batched call —
+        one device->host transfer for the whole admission wave instead of
+        one per prompt (the per-row streams are row-independent, so the
+        tokens are bitwise the old one-call-per-row path)."""
+        if not seqs:
+            return
+        logits = logits_parts[0] if len(logits_parts) == 1 \
+            else jnp.concatenate(logits_parts, axis=0)
+        sps = [s.req.sampling for s in seqs]
+        if all(sp.temperature <= 0 for sp in sps):
+            # all-greedy wave: sample_tokens returns greedy_tokens(logits)
+            # verbatim for temp <= 0 rows — skip the filter/PRNG work and
+            # the five knob-array uploads
+            toks = np.asarray(sampler.greedy_tokens(logits))
+        else:
+            toks = np.asarray(sampler.sample_tokens(
+                logits,
+                jnp.asarray([sp.temperature for sp in sps], jnp.float32),
+                jnp.asarray([sp.top_k for sp in sps], jnp.int32),
+                jnp.asarray([sp.top_p for sp in sps], jnp.float32),
+                jnp.asarray([np.uint32(sp.seed) for sp in sps], jnp.uint32),
+                jnp.asarray([len(s.generated) for s in seqs], jnp.int32),
+                vocab_size=self.cfg.vocab_size))
+        for seq, tok in zip(seqs, toks):
+            tok = int(tok)
+            finished = self.sched.record_first_token(seq, tok)
+            events.append(StreamEvent(seq.req.rid, tok, self.detok(tok),
+                                      finished))
 
-    def _admit(self, seq, events: List[StreamEvent]) -> None:
-        cfg, s = self.cfg, self.serve
-        tokens = seq.cached_prompt
-        s_tok = len(tokens)
-        if s.bucket_prompts and self._attn_only:
+    def _prefill_len(self, seq) -> int:
+        s_tok = len(seq.cached_prompt)
+        if self.serve.bucket_prompts and self._attn_only:
             s_tok = min(_next_pow2(s_tok),
-                        s.max_seq_len - cfg.num_image_tokens)
-        m, fn = self._get_prefill(s_tok)
-        toks = np.zeros((1, s_tok), np.int32)
-        toks[0, :len(tokens)] = tokens
-        batch = {"tokens": jnp.asarray(toks)}
-        dt = jnp.dtype(cfg.dtype)
-        if cfg.encoder_layers:
-            batch["frames"] = jnp.zeros(
-                (1, cfg.encoder_seq, cfg.d_model), dt)
-        if cfg.num_image_tokens:
-            batch["img"] = jnp.zeros(
-                (1, cfg.num_image_tokens, cfg.d_model), dt)
-        last = seq.pos - 1                     # absolute, incl. image tokens
-        logits, dense = fn(self.params, batch,
-                           jnp.asarray([last], jnp.int32))
-        self.caches = kv_pages.admit_prefill(
-            self.caches, dense, cfg, seq.slot, seq.pages, s.page_size,
-            table_width=s.max_pages_per_seq)
-        tok = self._sample_row(logits, seq)
-        finished = self.sched.record_first_token(seq, tok)
-        events.append(StreamEvent(seq.req.rid, tok, self.detok(tok),
-                                  finished))
+                        self.serve.max_seq_len - self.cfg.num_image_tokens)
+        return s_tok
+
+    def _admit_wave(self, seqs):
+        """Prefill + page-scatter a whole admission wave: one prefill call
+        and one jitted pool scatter per distinct (bucketed) prompt length
+        instead of one of each per sequence. Returns (seqs in processing
+        order, their prefill-logit blocks) for batched first-token
+        sampling."""
+        cfg, s = self.cfg, self.serve
+        groups: Dict[int, list] = {}
+        for seq in seqs:                       # group, keep arrival order
+            groups.setdefault(self._prefill_len(seq), []).append(seq)
+        ordered, logits_parts = [], []
+        for s_tok, group in groups.items():
+            nb = len(group)
+            m, fn = self._get_prefill(s_tok, nb)
+            toks = np.zeros((nb, s_tok), np.int32)
+            last = np.empty(nb, np.int32)
+            for i, seq in enumerate(group):
+                prompt = seq.cached_prompt
+                toks[i, :len(prompt)] = prompt
+                last[i] = seq.pos - 1          # absolute, incl. image tokens
+            batch = {"tokens": jnp.asarray(toks)}
+            dt = jnp.dtype(cfg.dtype)
+            if cfg.encoder_layers:
+                batch["frames"] = jnp.zeros(
+                    (nb, cfg.encoder_seq, cfg.d_model), dt)
+            if cfg.num_image_tokens:
+                batch["img"] = jnp.zeros(
+                    (nb, cfg.num_image_tokens, cfg.d_model), dt)
+            logits, dense = fn(self.params, batch, jnp.asarray(last))
+            self.caches = kv_pages.admit_prefill(
+                self.caches, dense, cfg, [q.slot for q in group],
+                [q.pages for q in group], s.page_size,
+                table_width=s.max_pages_per_seq)
+            ordered.extend(group)
+            logits_parts.append(logits)
+        return ordered, logits_parts
+
+    def _megastep(self, params, caches, tokens, page_table, seq_lens, mask,
+                  temperature, top_k, top_p, seed, step, *, horizon, greedy):
+        """`horizon` fused decode+sample ticks: each tick decodes one token
+        per row, samples the next, and advances positions/sample indices by
+        the active mask — all on device, tokens never round-tripping to the
+        host. Returns ([horizon, slots] sampled tokens, last tokens, caches,
+        advanced seq_lens, advanced step) — bitwise the sequence of
+        single-tick calls it replaces (same per-tick math, page table and
+        knobs constant across the horizon by construction)."""
+        def tick(carry, _):
+            tok, caches, sl, st = carry
+            logits, caches = self._md.decode_step_paged(
+                params, tok[:, None], caches, page_table, sl)
+            if greedy:
+                nxt = sampler.greedy_tokens(logits)
+            else:
+                nxt = sampler.sample_tokens(
+                    logits, temperature, top_k, top_p, seed, st,
+                    vocab_size=self.cfg.vocab_size)
+            return (nxt, caches, sl + mask, st + mask), nxt
+        (tok, caches, sl, st), toks = jax.lax.scan(
+            tick, (tokens, caches, seq_lens, step), None, length=horizon)
+        return toks, tok, caches, sl, st
+
+    def _upload_plan(self, plan) -> Dict[str, jax.Array]:
+        """Host->device upload of a step plan (epoch-change path).
+
+        tokens/seq_lens/step advance every tick, so they always re-upload;
+        the slow-moving fields (page table, active mask, sampling knobs)
+        usually survive an epoch bump unchanged — those reuse the previous
+        device buffer when their host bytes are identical, so a typical
+        epoch change (one page grown, one request finished) uploads two or
+        three small arrays, not ten."""
+        prev_host, prev_dev = self._host_plan, self._dev_plan
+        dev = {
+            "epoch": self.sched.plan_epoch,
+            "tokens": jnp.asarray(plan.tokens),
+            "seq_lens": jnp.asarray(plan.seq_lens),
+            "step": jnp.asarray(plan.step),
+        }
+        host: Dict[str, np.ndarray] = {}
+        slow = {"page_table": plan.page_table,
+                "mask": plan.active.astype(np.int32),
+                "temperature": plan.temperature,
+                "top_k": plan.top_k,
+                "top_p": plan.top_p,
+                "seed": plan.seed}
+        for name, arr in slow.items():
+            if prev_dev is not None and \
+                    np.array_equal(prev_host[name], arr):
+                dev[name] = prev_dev[name]
+                host[name] = prev_host[name]
+            else:
+                dev[name] = jnp.asarray(arr)
+                host[name] = arr.copy()
+        self._host_plan = host
+        return dev
 
     # ------------------------------------------------------------- #
     def step(self) -> List[StreamEvent]:
@@ -186,45 +306,60 @@ class Engine:
         with rec.span("serve/tick", track="serve"):
             events: List[StreamEvent] = []
             with rec.span("serve/prefill", track="serve"):
-                for seq in self.sched.poll_admissions():
-                    self._admit(seq, events)
+                waiting = self.sched.poll_admissions()
+                if waiting:
+                    seqs, logits_parts = self._admit_wave(waiting)
+                    self._sample_admitted(seqs, logits_parts, events)
             plan = self.sched.prepare_step()
             if plan is None:
                 return events
+            dev = self._dev_plan
+            if dev is None or dev["epoch"] != self.sched.plan_epoch:
+                dev = self._dev_plan = self._upload_plan(plan)
+            H = self.sched.steady_horizon()
+            # all-greedy megasteps skip the sampler's filters/PRNG
+            # entirely (bitwise the sampler's greedy branch — one shared
+            # definition, sampler.greedy_tokens)
+            greedy = not bool(plan.temperature.any())
             with rec.span("serve/decode", track="serve",
-                          rows=plan.num_active) as dsp:
-                logits, self.caches = self._decode(
-                    self.params, jnp.asarray(plan.tokens)[:, None],
-                    self.caches, jnp.asarray(plan.page_table),
-                    jnp.asarray(plan.seq_lens))
-                if not plan.temperature.any():
-                    # all-greedy step: skip the sampler's full-vocab
-                    # sorts/PRNG (bitwise the sampler's greedy branch)
-                    toks = np.asarray(
-                        jnp.argmax(logits, axis=-1).astype(jnp.int32))
-                else:
-                    toks = np.asarray(sampler.sample_tokens(
-                        logits, jnp.asarray(plan.temperature),
-                        jnp.asarray(plan.top_k), jnp.asarray(plan.top_p),
-                        jnp.asarray(plan.seed), jnp.asarray(plan.step),
-                        vocab_size=self.cfg.vocab_size))
+                          rows=plan.num_active, ticks=H) as dsp:
+                toks_dev, last_dev, self.caches, sl_dev, st_dev = \
+                    self._fused(
+                        self.params, self.caches, dev["tokens"],
+                        dev["page_table"], dev["seq_lens"], dev["mask"],
+                        dev["temperature"], dev["top_k"], dev["top_p"],
+                        dev["seed"], dev["step"], horizon=H, greedy=greedy)
+                toks_dev.block_until_ready()
+            with rec.span("serve/sample", track="serve",
+                          rows=plan.num_active):
+                toks = np.asarray(toks_dev)   # [H, slots]: the megastep's
+                #                               ONE device->host transfer
+            # advance the device plan to the next tick's steady state:
+            # the megastep already returned it — last sampled tokens feed
+            # the next decode without a round-trip; commit below may bump
+            # the epoch, forcing a re-upload anyway
+            dev["tokens"] = last_dev
+            dev["seq_lens"] = sl_dev
+            dev["step"] = st_dev
             if rec.enabled and plan.num_active:
-                # np.asarray already synced the device work; the per-row
-                # quotient is the per-token decode latency
+                # decode span blocked on the tokens, so dur_ns is true
+                # device time for the whole megastep; the per-row-per-tick
+                # quotient is the per-token latency
                 rec.histogram("serve.decode_token_ms").observe(
-                    dsp.dur_ns / 1e6 / plan.num_active)
-                rec.counter("serve.decode_tokens").inc(plan.num_active)
+                    dsp.dur_ns / 1e6 / (plan.num_active * H))
+                rec.counter("serve.decode_tokens").inc(plan.num_active * H)
                 # occupied slice of the (up-front) pool allocation
                 rec.gauge("serve.kv_pages_used_bytes").set(
                     self._pool_nbytes * self.sched.pool.used_pages
                     // max(self.serve.num_pages - 1, 1))
-            active = list(self.sched.running)
-            done = {s.req.rid for s in self.sched.commit_step(toks)}
-            for seq in active:
-                tok = seq.generated[-1]
-                events.append(StreamEvent(seq.req.rid, tok,
-                                          self.detok(tok),
-                                          seq.req.rid in done))
+            for t in range(H):
+                active = list(self.sched.running)
+                done = {s.req.rid for s in self.sched.commit_step(toks[t])}
+                for seq in active:
+                    tok = seq.generated[-1]
+                    events.append(StreamEvent(seq.req.rid, tok,
+                                              self.detok(tok),
+                                              seq.req.rid in done))
             self.steps_run += 1
             return events
 
@@ -274,7 +409,8 @@ class Engine:
                 "peak_pages": int(s.util_peak),
                 "mean_pages": mean,
                 "peak_util": s.util_peak / total,
-                "mean_util": mean / total}
+                "mean_util": mean / total,
+                "reclaimed_pages": int(s.reclaimed_pages)}
 
 
 # ----------------------------------------------------------------- #
@@ -283,8 +419,8 @@ class Engine:
 class DenseServer:
     """Greedy static-batch decode with a dense grown KV cache — the legacy
     serve path, kept as the benchmark/parity baseline. Reusable so repeat
-    ``generate`` calls hit the compile cache (bench_serve times the second
-    call)."""
+    ``generate`` calls hit the compile cache (bench_serve warms it, then
+    times the best of several calls)."""
 
     def __init__(self, cfg: ModelConfig, params, batch: int,
                  prompt_len: int, max_new_tokens: int,

@@ -60,24 +60,26 @@ class PagePool:
 # --------------------------------------------------------------------- #
 # device-side admission
 # --------------------------------------------------------------------- #
-def _scatter_kv(pool, dense, page_row, page_size):
-    """pool [pp, N, ps, KVd, Dh] <- dense [pp, 1, L, ...], chunked into the
-    pages of `page_row` [P] (fixed width; unused tail entries are the null
-    page, which swallows the spill chunks — never read, and real decode
-    writes land in each slot before the seq-len mask ever exposes it)."""
-    pp, _, L, KVd, Dh = dense.shape
-    P = page_row.shape[0]
-    d = dense[:, 0]
+def _scatter_kv(pool, dense, page_rows, page_size):
+    """pool [pp, N, ps, KVd, Dh] <- dense [pp, nb, L, ...], each row chunked
+    into the pages of its `page_rows` row [nb, P] (fixed width; unused tail
+    entries are the null page, which swallows the spill chunks — never
+    read, and real decode writes land in each slot before the seq-len mask
+    ever exposes it). Rows own disjoint pages, so the flattened scatter
+    only ever collides on the null page, where any winner is fine."""
+    pp, nb, L, KVd, Dh = dense.shape
+    P = page_rows.shape[1]
     pad = P * page_size - L
+    d = dense
     if pad:
-        d = jnp.pad(d, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    d = d.reshape(pp, P, page_size, KVd, Dh).astype(pool.dtype)
-    return pool.at[:, page_row].set(d)
+        d = jnp.pad(d, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    d = d.reshape(pp, nb * P, page_size, KVd, Dh).astype(pool.dtype)
+    return pool.at[:, page_rows.reshape(-1)].set(d)
 
 
 @functools.partial(jax.jit, static_argnames=("pattern", "page_size"),
                    donate_argnums=(0,))
-def _admit(paged, dense, slot, page_row, *, pattern, page_size):
+def _admit(paged, dense, slots, page_rows, *, pattern, page_size):
     out = {}
     for part in ("zo", "bp"):
         entries = []
@@ -85,38 +87,42 @@ def _admit(paged, dense, slot, page_row, *, pattern, page_size):
             pe, de = paged[part][i], dense[part][i]
             if kind == ATTN:
                 ne = dict(pe)
-                ne["k"] = _scatter_kv(pe["k"], de["k"], page_row,
+                ne["k"] = _scatter_kv(pe["k"], de["k"], page_rows,
                                       page_size)
-                ne["v"] = _scatter_kv(pe["v"], de["v"], page_row,
+                ne["v"] = _scatter_kv(pe["v"], de["v"], page_rows,
                                       page_size)
                 for ck in ("ck", "cv"):      # cross-attn KV: dense per slot
                     if ck in pe:
-                        ne[ck] = pe[ck].at[:, slot].set(
-                            de[ck][:, 0].astype(pe[ck].dtype))
+                        ne[ck] = pe[ck].at[:, slots].set(
+                            de[ck].astype(pe[ck].dtype))
             else:                            # recurrent state: dense per slot
                 ne = jax.tree.map(
-                    lambda p, d: p.at[:, slot].set(d[:, 0].astype(p.dtype)),
+                    lambda p, d: p.at[:, slots].set(d.astype(p.dtype)),
                     pe, de)
             entries.append(ne)
         out[part] = tuple(entries)
     return out
 
 
-def admit_prefill(paged_caches, dense_caches, cfg: ModelConfig, slot: int,
-                  page_ids: Sequence[int], page_size: int,
-                  table_width: int):
-    """Write a batch-1 prefilled dense cache into the paged caches.
+def admit_prefill(paged_caches, dense_caches, cfg: ModelConfig,
+                  slots: Sequence[int], page_ids: Sequence[Sequence[int]],
+                  page_size: int, table_width: int):
+    """Write a batch-nb prefilled dense cache into the paged caches — the
+    whole admission wave in ONE jitted scatter (one reshape + one indexed
+    set per KV leaf, regardless of wave size).
 
-    The page list is padded to the fixed `table_width`
-    (ServeConfig.max_pages_per_seq) so the jitted scatter compiles per
-    dense-cache shape only — not per admission length (re-admissions
-    after preemption have ever-changing lengths). Pad/spill chunks land
-    in the null page. Recurrent/cross state goes into row `slot`.
-    Donates the old paged caches.
+    Row i of the dense cache goes to `slots[i]` / `page_ids[i]`. Each page
+    list is padded to the fixed `table_width` (ServeConfig.max_pages_per_seq)
+    so the scatter compiles per dense-cache shape only — not per admission
+    length (re-admissions after preemption have ever-changing lengths).
+    Pad/spill chunks land in the null page. Recurrent/cross state goes
+    into the slot rows. Donates the old paged caches.
     """
-    row = list(page_ids) + [NULL_PAGE] * (table_width - len(page_ids))
-    return _admit(paged_caches, dense_caches, jnp.int32(slot),
-                  jnp.asarray(row, jnp.int32),
+    rows = [list(p) + [NULL_PAGE] * (table_width - len(p))
+            for p in page_ids]
+    return _admit(paged_caches, dense_caches,
+                  jnp.asarray(list(slots), jnp.int32),
+                  jnp.asarray(rows, jnp.int32),
                   pattern=cfg.pattern, page_size=page_size)
 
 

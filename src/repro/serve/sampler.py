@@ -10,8 +10,13 @@ argmax (bitwise the dense ``decode_step`` path, which the parity tests
 use).
 
 All knobs are per-row traced values, so one compiled sampler serves any
-mix of requests: top-k/top-p run full-vocab sorts (fine at smoke vocab
-sizes; a fused Pallas top-k is a ROADMAP follow-on).
+mix of requests. ``sample_tokens`` filters through the sort-free
+threshold-refine selector (kernels/ops.py ``topk_topp_mask`` — Pallas on
+TPU, jnp radix ref elsewhere), which replaces the two full-vocab argsorts
+that dominated large-vocab sampling. ``sample_tokens_reference`` keeps the
+original full-sort pipeline as the semantic oracle; the two agree
+token-for-token except when ``p`` lands within one float rounding step of
+a tie-run boundary (see kernels/ref.py ``topk_topp_mask_ref``).
 """
 from __future__ import annotations
 
@@ -24,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import prng
+from ..kernels import ops
 
 NEG_INF = -1e30
 _SALT_GUMBEL = 0x5E17E_1
@@ -36,6 +42,14 @@ class SamplingParams:
     top_k: int = 0                       # 0 => disabled
     top_p: float = 1.0                   # 1 => disabled
     seed: int = 0
+
+
+@jax.jit
+def greedy_tokens(logits):
+    """argmax over the vocab axis — the one greedy definition shared by
+    the engine's all-greedy fast path, the dense baseline, and the
+    sampler's ``temperature <= 0`` branch (parity tests pin all three)."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
 def _top_k_mask(logits, k):
@@ -61,6 +75,34 @@ def _top_p_mask(logits, p):
     return jnp.where(keep, logits, NEG_INF)
 
 
+def _gumbel_noise(seed, step, V):
+    """Per-row Gumbel(0, 1) stream keyed on (request seed, sample index)."""
+    row_seed = seed.astype(jnp.uint32) ^ \
+        (step.astype(jnp.uint32) * _STEP_MIX)
+    bits = jax.vmap(
+        lambda s: prng.uniform_bits(s, _SALT_GUMBEL, (V,)))(row_seed)
+    u = (bits >> np.uint32(8)).astype(jnp.float32) * np.float32(2 ** -24) \
+        + np.float32(2 ** -25)                     # (0, 1]
+    return -jnp.log(-jnp.log(u))
+
+
+def _sample(logits, temperature, top_k, top_p, seed, step, vocab_size,
+            filter_fn):
+    B, V = logits.shape
+    greedy = greedy_tokens(logits)
+
+    masked = logits
+    if 0 < vocab_size < V:
+        masked = jnp.where(jnp.arange(V) < vocab_size, masked, NEG_INF)
+    # temperature FIRST, filters on the actual sampling distribution
+    # (HF/vLLM convention — top_p of the flattened distribution)
+    t = jnp.maximum(temperature, 1e-6)[:, None]
+    masked = filter_fn(masked / t, top_k, top_p)
+    g = _gumbel_noise(seed, step, V)
+    sampled = jnp.argmax(masked + g, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature > 0, sampled, greedy)
+
+
 @functools.partial(jax.jit, static_argnames=("vocab_size",))
 def sample_tokens(logits, temperature, top_k, top_p, seed, step,
                   vocab_size: int = 0):
@@ -72,26 +114,15 @@ def sample_tokens(logits, temperature, top_k, top_p, seed, step,
     noise could otherwise emit invalid ids); greedy stays unmasked to
     remain bitwise the dense ``decode_step`` argmax.
     """
-    B, V = logits.shape
-    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return _sample(logits, temperature, top_k, top_p, seed, step,
+                   vocab_size, ops.topk_topp_mask)
 
-    masked = logits
-    if 0 < vocab_size < V:
-        masked = jnp.where(jnp.arange(V) < vocab_size, masked, NEG_INF)
-    # temperature FIRST, filters on the actual sampling distribution
-    # (HF/vLLM convention — top_p of the flattened distribution)
-    t = jnp.maximum(temperature, 1e-6)[:, None]
-    masked = masked / t
-    masked = _top_k_mask(masked, top_k)
-    masked = _top_p_mask(masked, top_p)
-    # per-row stream: fold the sample index into the request seed, then hash
-    # the vocab axis (same machinery as the ZO perturbation noise)
-    row_seed = seed.astype(jnp.uint32) ^ \
-        (step.astype(jnp.uint32) * _STEP_MIX)
-    bits = jax.vmap(
-        lambda s: prng.uniform_bits(s, _SALT_GUMBEL, (V,)))(row_seed)
-    u = (bits >> np.uint32(8)).astype(jnp.float32) * np.float32(2 ** -24) \
-        + np.float32(2 ** -25)                     # (0, 1]
-    g = -jnp.log(-jnp.log(u))                      # Gumbel(0, 1)
-    sampled = jnp.argmax(masked + g, axis=-1).astype(jnp.int32)
-    return jnp.where(temperature > 0, sampled, greedy)
+
+@functools.partial(jax.jit, static_argnames=("vocab_size",))
+def sample_tokens_reference(logits, temperature, top_k, top_p, seed, step,
+                            vocab_size: int = 0):
+    """Full-sort oracle for ``sample_tokens`` — identical Gumbel stream and
+    greedy branch, filters via the original argsort pipeline."""
+    return _sample(logits, temperature, top_k, top_p, seed, step,
+                   vocab_size,
+                   lambda x, k, p: _top_p_mask(_top_k_mask(x, k), p))

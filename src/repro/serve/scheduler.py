@@ -9,6 +9,16 @@ Sequence lifecycle:
                                      re-extended with generated tokens,
                                      re-prefilled at next admission)
 
+SWA reclamation: for sliding-window archs (``window > 0``) a sequence's
+page list is *position-indexed with holes* — entry ``lp`` maps logical
+page ``lp`` and holds ``NULL_PAGE`` once every position on that page has
+slid out of the attention window. Reclaimed pages return to the pool
+immediately (before growth allocations each step), the null entries flow
+into the step's page table, and the decode kernel skips them; long
+decodes therefore run in a pool bounded by the window, not the sequence
+length. Admission allocates holes up front for prompt positions already
+out of window (their prefill KV chunks land in the never-read null page).
+
 Invariants the property tests (tests/test_serve_scheduler.py) enforce:
   * page conservation — live pages + free pages == num_pages - 1 (null);
   * no starvation — FIFO admission + LIFO ("newest victim") preemption
@@ -50,7 +60,7 @@ class _Sequence:
     req: Request
     state: str = WAITING
     slot: int = -1
-    pages: List[int] = field(default_factory=list)
+    pages: List[int] = field(default_factory=list)   # NULL_PAGE = reclaimed
     pos: int = 0                     # tokens currently cached (incl. extra)
     generated: List[int] = field(default_factory=list)
     next_token: int = 0              # token to feed at the next decode step
@@ -86,8 +96,17 @@ class StepPlan:
 
 
 class Scheduler:
-    def __init__(self, serve: ServeConfig):
+    def __init__(self, serve: ServeConfig, window: int = 0):
         self.serve = serve
+        self.window = window             # model sliding window (0 = full)
+        self.reclaimed_pages = 0         # SWA pages returned mid-sequence
+        # bumped whenever the next StepPlan differs from the previous one
+        # by more than the steady-state advance (active rows' pos and
+        # sample index +1, tokens = last sampled): admissions, evictions,
+        # preemptions, page growth, SWA reclamation. The engine keys its
+        # persistent device-side plan buffers on it — an unchanged epoch
+        # means the buffers can advance on device with zero host uploads.
+        self.plan_epoch = 0
         self.pool = PagePool(serve.num_pages)
         self.waiting: Deque[_Sequence] = deque()
         self.slots: List[Optional[_Sequence]] = \
@@ -116,10 +135,10 @@ class Scheduler:
             raise ValueError(
                 f"request needs {total} cache tokens > max_seq_len "
                 f"{s.max_seq_len}")
-        if s.pages_for(total + 1) > s.num_pages - 1:
+        if self._worst_case_pages(total + 1) > s.num_pages - 1:
             raise ValueError(
-                f"request worst case {s.pages_for(total + 1)} pages "
-                f"> pool {s.num_pages - 1}; would deadlock")
+                f"request worst case {self._worst_case_pages(total + 1)} "
+                f"pages > pool {s.num_pages - 1}; would deadlock")
         req = Request(next(self._rid), list(prompt),
                       sampling or SamplingParams(), max_new, prefix_extra)
         rec = obs.get()
@@ -127,6 +146,38 @@ class Scheduler:
             req, submit_ns=obs.perf_ns() if rec.enabled else 0))
         rec.gauge("serve.queue_depth").set(len(self.waiting))
         return req.rid
+
+    # ---------------- SWA reclamation ------------------------------- #
+    def _page_dead(self, lp: int, pos: int) -> bool:
+        """True when logical page lp holds no position a decode step at
+        write position `pos` (or any later one) can still attend: the
+        kernel masks t > pos - window, and pos only grows."""
+        return self.window > 0 and \
+            (lp + 1) * self.serve.page_size - 1 <= pos - self.window
+
+    def _worst_case_pages(self, tokens: int) -> int:
+        """Peak pages one sequence can hold at once. With a sliding
+        window, fully out-of-window pages are reclaimed each step, so the
+        footprint is bounded by the pages a window-length span can
+        straddle (+1 for the page being written), not by `tokens`."""
+        p = self.serve.pages_for(tokens)
+        if self.window > 0:
+            p = min(p, self.serve.pages_for(self.window) + 1)
+        return p
+
+    def _reclaim(self, seq: _Sequence) -> None:
+        """Free pages that slid fully out of seq's window; null their
+        table entries so the kernel never touches them again."""
+        dead = [lp for lp, pg in enumerate(seq.pages)
+                if pg != NULL_PAGE and self._page_dead(lp, seq.pos)]
+        if not dead:
+            return
+        self.pool.free([seq.pages[lp] for lp in dead])
+        for lp in dead:
+            seq.pages[lp] = NULL_PAGE
+        self.plan_epoch += 1
+        self.reclaimed_pages += len(dead)
+        obs.get().counter("serve.page_reclaims").inc(len(dead))
 
     def has_work(self) -> bool:
         return bool(self.waiting) or any(self.slots)
@@ -147,17 +198,26 @@ class Scheduler:
                 break
             seq = self.waiting[0]
             need = seq.req.prefix_extra + len(seq.cached_prompt)
-            pages = self.pool.alloc(self.serve.pages_for(need))
+            # prompt positions already out of window get holes up front:
+            # their prefill KV chunks land in the never-read null page
+            n_log = self.serve.pages_for(need)
+            live = [lp for lp in range(n_log)
+                    if not self._page_dead(lp, need)]
+            pages = self.pool.alloc(len(live))
             if pages is None:
                 break
             self.waiting.popleft()
             seq.state = RUNNING
             seq.slot = free_slots[0]
-            seq.pages = pages
+            seq.pages = [NULL_PAGE] * n_log
+            for lp, pg in zip(live, pages):
+                seq.pages[lp] = pg
             seq.pos = need
             self.slots[seq.slot] = seq
             self._admit_order.append(seq)
             out.append(seq)
+        if out:
+            self.plan_epoch += 1
         rec = obs.get()
         if rec.enabled:
             rec.gauge("serve.queue_depth").set(len(self.waiting))
@@ -167,8 +227,9 @@ class Scheduler:
 
     # ---------------- per-step assembly ----------------------------- #
     def _evict(self, seq: _Sequence) -> None:
+        self.plan_epoch += 1
         obs.get().counter("serve.evictions").inc()
-        self.pool.free(seq.pages)
+        self.pool.free([p for p in seq.pages if p != NULL_PAGE])
         seq.pages = []
         self.slots[seq.slot] = None
         seq.slot = -1
@@ -179,6 +240,11 @@ class Scheduler:
         it is about to write; preempt (newest-first) on exhaustion. Returns
         None when nothing is running."""
         ps = self.serve.page_size
+        if self.window > 0:
+            # reclaim before growth so freed pages can back this very
+            # step's new allocations (bounded-pool long decode)
+            for seq in self._admit_order:
+                self._reclaim(seq)
         for seq in list(self._admit_order):
             if seq.state != RUNNING:
                 continue
@@ -187,6 +253,7 @@ class Scheduler:
                     page = self.pool.alloc(1)
                     if page is not None:
                         seq.pages.extend(page)
+                        self.plan_epoch += 1
                         break
                     # newest victim; never preempt `seq` unless it is alone
                     victim = self._admit_order[-1]
@@ -234,6 +301,27 @@ class Scheduler:
         obs.get().gauge("serve.page_util").set(
             used / max(self.serve.num_pages - 1, 1))
         return plan
+
+    def steady_horizon(self) -> int:
+        """Decode ticks (>= 1) for which the plan just returned by
+        ``prepare_step`` is *provably* epoch-stable, so the engine may fuse
+        them into one device megastep. Within the horizon no plan-changing
+        event can fire: no row crosses a page boundary (growth), no row
+        exhausts its budget before the final tick (finish/evict), and —
+        since nothing finishes, grows, or is preempted — no pages or slots
+        free up, so blocked admissions stay blocked. EOS can end a row on
+        any sampled token, so an armed ``eos_id`` pins the horizon to 1;
+        SWA reclamation is merely postponed to the horizon's end, which is
+        safe (dead pages are already masked out of attention) and keeps the
+        reclaim-before-growth ordering the bounded-pool guarantee needs."""
+        h = self.serve.megastep
+        if h <= 1 or self.serve.eos_id >= 0:
+            return 1
+        ps = self.serve.page_size
+        for seq in self._admit_order:
+            h = min(h, seq.budget_left,            # finish only at the end
+                    ps - (seq.pos % ps))           # ticks to next new page
+        return max(h, 1)
 
     def _preempt_seq(self, victim: _Sequence) -> None:
         self._evict(victim)
@@ -286,9 +374,9 @@ class Scheduler:
         return done
 
     def check_invariants(self) -> None:
-        live = [p for s in self._admit_order for p in s.pages]
+        live = [p for s in self._admit_order for p in s.pages
+                if p != NULL_PAGE]
         assert len(live) == len(set(live)), "page double-booked"
-        assert NULL_PAGE not in live
         assert len(live) + self.pool.free_pages == self.serve.num_pages - 1, \
             "page leak"
         for i, s in enumerate(self.slots):

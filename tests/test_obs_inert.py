@@ -179,6 +179,11 @@ def test_serve_trace_covers_wall_time_and_validates(tmp_path):
     doc = chrome_trace(rec)
     evs = validate_chrome_trace(doc)
     assert any(e["ph"] == "X" and e["name"] == "serve/decode" for e in evs)
+    # sampling is its own span (split out of serve/decode): every fused
+    # megastep carries exactly one sample phase (the token download)
+    n_decode = sum(1 for s in spans if s["name"] == "serve/decode")
+    n_sample = sum(1 for s in spans if s["name"] == "serve/sample")
+    assert n_decode > 0 and n_sample == n_decode
     hist = rec.snapshot()["histograms"]
     assert hist["serve.ttft_ms"]["count"] == 2           # one TTFT per req
     assert hist["serve.decode_token_ms"]["count"] > 0

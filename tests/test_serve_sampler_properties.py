@@ -1,0 +1,180 @@
+"""Property suite pinning the sort-free sampler to the full-sort oracle.
+
+The sort-free selector (kernels/ref.py topk_topp_mask_ref, Pallas twin
+kernels/topk_mask.py) must reproduce the full-sort reference pipeline
+(`sampler._top_k_mask` + `_top_p_mask`) keep-set for keep-set — the one
+documented exception is the nucleus tie-run boundary under float
+rounding, so the tied cases here use power-of-two vocab sizes where every
+partial mass sum is an exact binary fraction and agreement is provably
+bitwise. Randomized trials are seeded numpy (hypothesis is not in the
+container image); each seed is a fixed regression case.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.topk_mask import topk_topp_mask as pallas_topk_topp_mask
+from repro.serve import sampler
+
+
+def _fullsort_mask(x, k, p):
+    return np.asarray(sampler._top_p_mask(
+        sampler._top_k_mask(jnp.asarray(x), jnp.asarray(k)),
+        jnp.asarray(p)))
+
+
+def _sortfree_mask(x, k, p):
+    return np.asarray(ref.topk_topp_mask_ref(
+        jnp.asarray(x), jnp.asarray(k, jnp.int32),
+        jnp.asarray(p, jnp.float32)))
+
+
+def _rand_case(seed, B, V, tie_grid=None):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(B, V)).astype(np.float32)
+    if tie_grid:
+        x = np.round(x * tie_grid) / tie_grid   # heavy value collisions
+    k = rng.integers(0, V + 2, size=B).astype(np.int32)
+    p = rng.choice([0.05, 0.3, 0.7, 0.95, 0.999, 1.0], size=B) \
+        .astype(np.float32)
+    return x, k, p
+
+
+# --------------------------------------------------------------- #
+# keep-set equivalence vs the full-sort reference
+# --------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("tie_grid", [None, 4])
+def test_sortfree_keepsets_match_fullsort(seed, tie_grid):
+    x, k, p = _rand_case(seed, B=4, V=301, tie_grid=tie_grid)
+    np.testing.assert_array_equal(_sortfree_mask(x, k, p),
+                                  _fullsort_mask(x, k, p))
+
+
+def test_sortfree_keepsets_match_fullsort_64k_vocab():
+    """The motivating size: >= 64k vocab, where the full sorts dominate."""
+    x, k, p = _rand_case(7, B=2, V=65536)
+    k = np.asarray([50, 63000], np.int32)
+    np.testing.assert_array_equal(_sortfree_mask(x, k, p),
+                                  _fullsort_mask(x, k, p))
+
+
+@pytest.mark.parametrize("k,p", [(0, 1.0), (5, 0.5), (256, 0.999),
+                                 (300, 1.0), (1, 0.05)])
+def test_all_tied_rows_power_of_two_vocab(k, p):
+    """Fully tied logits at power-of-two V: every nucleus partial sum is
+    an exact binary fraction, so the histogram-order and sorted-order
+    accumulations agree bitwise even on the tie-run boundary."""
+    V = 256
+    x = np.zeros((3, V), np.float32)
+    x[1] = 1.5                                   # tied at a non-zero value
+    x[2] = -2.0
+    ks = np.full(3, k, np.int32)
+    ps = np.full(3, p, np.float32)
+    np.testing.assert_array_equal(_sortfree_mask(x, ks, ps),
+                                  _fullsort_mask(x, ks, ps))
+
+
+def test_degenerate_knobs_disable_filters():
+    """k <= 0 and p >= 1 must be exact no-ops, k >= V keeps everything."""
+    x, _, _ = _rand_case(11, B=3, V=97)
+    for k, p in [(0, 1.0), (-3, 1.0), (97, 1.0), (200, 1.0)]:
+        ks = np.full(3, k, np.int32)
+        ps = np.full(3, p, np.float32)
+        got = _sortfree_mask(x, ks, ps)
+        np.testing.assert_array_equal(got, x)
+
+
+def test_topk_is_exact_on_distinct_values():
+    """With all-distinct values, exactly k entries survive and every kept
+    value beats every dropped one — the partial selection is not
+    approximate."""
+    x, _, _ = _rand_case(13, B=4, V=413)
+    k = np.asarray([1, 7, 100, 412], np.int32)
+    p = np.ones(4, np.float32)
+    got = _sortfree_mask(x, k, p)
+    for b in range(4):
+        kept = got[b] > ref.NEG_INF / 2
+        assert kept.sum() == k[b]
+        assert x[b][kept].min() > x[b][~kept].max()
+
+
+def test_topp_keeps_minimal_nucleus():
+    """Kept mass reaches p, and removing the lightest kept entry drops
+    below p (the reference's minimal-prefix semantics)."""
+    x, _, _ = _rand_case(17, B=4, V=211)
+    k = np.zeros(4, np.int32)
+    p = np.asarray([0.1, 0.5, 0.9, 0.999], np.float32)
+    got = _sortfree_mask(x, k, p)
+    probs = np.exp(x - x.max(1, keepdims=True))
+    probs /= probs.sum(1, keepdims=True)
+    for b in range(4):
+        kept = got[b] > ref.NEG_INF / 2
+        mass = probs[b][kept].sum()
+        assert mass >= p[b] - 1e-5
+        if kept.sum() > 1:
+            assert mass - probs[b][kept].min() < p[b] + 1e-5
+
+
+# --------------------------------------------------------------- #
+# token-stream equivalence of the two jitted samplers
+# --------------------------------------------------------------- #
+def _streams(fn, logits, temps, ks, ps, seeds, n_steps, vocab_size):
+    out = []
+    for step in range(n_steps):
+        out.append(np.asarray(fn(
+            jnp.asarray(logits), jnp.asarray(temps), jnp.asarray(ks),
+            jnp.asarray(ps), jnp.asarray(seeds),
+            jnp.full(len(seeds), step, jnp.int32),
+            vocab_size=vocab_size)))
+    return np.stack(out)
+
+
+@pytest.mark.parametrize("seed", [0, 5])
+def test_sample_tokens_streams_match_reference(seed):
+    """Fixed seeds, mixed per-row knobs, several steps: the sort-free
+    sampler and the full-sort oracle emit identical token streams."""
+    rng = np.random.default_rng(seed)
+    B, V = 5, 128
+    logits = rng.normal(size=(B, V)).astype(np.float32) * 3
+    temps = np.asarray([0.0, 0.7, 1.0, 1.3, 0.2], np.float32)
+    ks = np.asarray([0, 5, V, 40, 1], np.int32)
+    ps = np.asarray([1.0, 0.9, 0.5, 1.0, 0.3], np.float32)
+    seeds = rng.integers(0, 2**32, size=B, dtype=np.uint32)
+    a = _streams(sampler.sample_tokens, logits, temps, ks, ps, seeds,
+                 n_steps=6, vocab_size=100)
+    b = _streams(sampler.sample_tokens_reference, logits, temps, ks, ps,
+                 seeds, n_steps=6, vocab_size=100)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_temperature_zero_is_greedy_argmax():
+    rng = np.random.default_rng(3)
+    logits = rng.normal(size=(4, 64)).astype(np.float32)
+    toks = np.asarray(sampler.sample_tokens(
+        jnp.asarray(logits), jnp.zeros(4, jnp.float32),
+        jnp.zeros(4, jnp.int32), jnp.ones(4, jnp.float32),
+        jnp.zeros(4, jnp.uint32), jnp.zeros(4, jnp.int32)))
+    np.testing.assert_array_equal(toks, logits.argmax(1))
+    np.testing.assert_array_equal(
+        toks, np.asarray(sampler.greedy_tokens(jnp.asarray(logits))))
+
+
+# --------------------------------------------------------------- #
+# Pallas kernel (interpret) is bitwise the jnp radix ref
+# --------------------------------------------------------------- #
+@pytest.mark.parametrize("seed,V", [(0, 300), (1, 97), (2, 1024)])
+def test_pallas_topk_mask_matches_ref(seed, V):
+    x, k, p = _rand_case(seed, B=3, V=V, tie_grid=4 if seed == 1 else None)
+    want = _sortfree_mask(x, k, p)
+    got = np.asarray(pallas_topk_topp_mask(
+        jnp.asarray(x), jnp.asarray(k), jnp.asarray(p), interpret=True))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_ops_dispatch_routes_to_ref_off_tpu():
+    x, k, p = _rand_case(23, B=2, V=130)
+    got = np.asarray(ops.topk_topp_mask(jnp.asarray(x), k, p))
+    np.testing.assert_array_equal(got, _sortfree_mask(x, k, p))

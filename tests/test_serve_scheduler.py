@@ -67,6 +67,51 @@ def test_random_traces_conserve_pages_and_terminate(seed):
         assert not s.pages and s.slot == -1
 
 
+@pytest.mark.parametrize("seed", range(6))
+def test_steady_horizon_predicts_epoch_stability(seed):
+    """steady_horizon's contract, checked against the scheduler itself:
+    committing h-1 tokens and re-running prepare_step must not bump the
+    plan epoch (no growth/finish/admission fires mid-horizon), every
+    intermediate plan must be exactly the steady advance of the first,
+    and no sequence may finish before the horizon's final tick."""
+    rng = np.random.default_rng(seed)
+    serve = ServeConfig(page_size=4, num_pages=int(rng.integers(12, 40)),
+                        max_batch_slots=int(rng.integers(1, 5)),
+                        max_seq_len=40, max_new_tokens=8, eos_id=-1,
+                        megastep=16)
+    sched = Scheduler(serve)
+    for _ in range(int(rng.integers(2, 8))):
+        try:
+            sched.submit(list(rng.integers(1, 100, rng.integers(1, 12))),
+                         SamplingParams(), int(rng.integers(1, 9)))
+        except ValueError:
+            pass                                   # pool too small: skip
+    guard = 0
+    while sched.has_work():
+        guard += 1
+        assert guard < 2_000
+        for seq in sched.poll_admissions():
+            sched.record_first_token(seq, int(rng.integers(1, 100)))
+        plan = sched.prepare_step()
+        if plan is None:
+            continue
+        h = sched.steady_horizon()
+        assert 1 <= h <= serve.megastep
+        epoch = sched.plan_epoch
+        for t in range(h):
+            done = sched.commit_step(
+                rng.integers(1, 100, serve.max_batch_slots).astype(np.int32))
+            if t < h - 1:
+                assert not done, "sequence finished mid-horizon"
+                mid = sched.prepare_step()
+                assert sched.plan_epoch == epoch, "epoch bumped mid-horizon"
+                adv = plan.seq_lens + (t + 1) * plan.active
+                assert np.array_equal(mid.seq_lens, adv)
+                assert np.array_equal(mid.page_table, plan.page_table)
+                assert np.array_equal(mid.active, plan.active)
+        sched.check_invariants()
+
+
 def test_submit_rejects_impossible_requests():
     serve = ServeConfig(page_size=4, num_pages=5, max_batch_slots=2,
                         max_seq_len=16, max_new_tokens=4)

@@ -169,7 +169,7 @@ def bench_gossip(args, chaos, steps, star_metrics, runner, tag):
           f"{star_metrics['uplink_bytes_per_step']:.0f}B uplink + "
           f"{star_metrics['broadcast_bytes_per_step']:.0f}B broadcast "
           f"(wire x{out['gossip_vs_star_wire_ratio']:.2f}, "
-          f"no coordinator to lose)")
+          "no coordinator to lose)")
     return out
 
 
@@ -302,11 +302,11 @@ def main(argv=None):
         metrics["int8_over_fp32_wall"] = \
             metrics["int8_fleet_wall_s_per_step"] \
             / metrics["fleet_wall_s_per_step"]
-        print(f"# int8/fp32: ZO bytes x"
+        print("# int8/fp32: ZO bytes x"
               f"{metrics['int8_over_fp32_zo_bytes']:.2f}, "
               f"step-time x{metrics['int8_over_fp32_wall']:.2f} "
-              f"(different models — the bytes ratio is the protocol "
-              f"claim, 9/12 per probe)")
+              "(different models — the bytes ratio is the protocol "
+              "claim, 9/12 per probe)")
 
     obs.memory.sample()    # reconcile fleet ledger/param tags vs jax live
     write_bench("fleet", {

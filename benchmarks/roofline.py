@@ -18,7 +18,7 @@ import json
 from pathlib import Path
 from typing import Dict, Optional
 
-from repro.configs import SHAPES, get_arch, get_shape, LaneConfig
+from repro.configs import get_arch, get_shape, LaneConfig
 from repro.core.api import tail_periods
 
 PEAK_FLOPS = 197e12
@@ -38,7 +38,6 @@ def model_flops_per_device(arch: str, shape_name: str, n_devices: int,
     S, B = shape.seq_len, shape.global_batch
 
     # attention context flops per token (QK^T + AV = 4 * ctx * H * Dh per layer)
-    n_attn = sum(1 for k in cfg.pattern) * 0  # computed below
     attn_layers = [i for i in range(cfg.num_layers)
                    if cfg.pattern[i % len(cfg.pattern)] == "attn"]
     ctx = {"train": S / 2, "prefill": S / 2, "decode": S}[shape.kind]

@@ -194,7 +194,7 @@ def section_signagree(_fast: bool):
     rate, total = pt.sign_agreement()
     dt = (time.perf_counter() - t0) * 1e6 / max(total, 1)
     print(f"# §4.3 sign agreement: {rate*100:.1f}% over {total} trials "
-          f"(paper: ~95%)")
+          "(paper: ~95%)")
     return {"int_loss_sign_agreement": rate,
             "int_loss_sign_trials": total,
             "int_loss_sign_us_per_trial": dt}

@@ -1,0 +1,28 @@
+"""reprolint — the repo-invariant static-analysis pass.
+
+The repo's core asset is bit-exact determinism: a fine-tune is a
+replayable (seed, scalar) ledger, and every fleet/serve guarantee
+collapses if any code path is nondeterministic or silently disabled.
+reprolint machine-checks the invariant *classes* prior PRs fixed one
+instance at a time — salted builtin hash(), `assert`s that vanish under
+python -O, non-monotonic clocks — plus the cross-file contracts
+(kernel/ref/ops dispatch triangle, docs/design.md § citations, the
+observability metric catalog, the ledger's documented wire sizes) that
+per-file linters cannot see.
+
+Usage: ``python -m repro.analysis`` (CLI, docs/analysis.md) or::
+
+    from repro.analysis import run_analysis, ALL_RULES
+    report = run_analysis(root, ALL_RULES)
+    assert report.clean, report.findings
+
+Pure stdlib — importable (and CI-runnable) without jax.
+"""
+from .core import (AllowEntry, Finding, Report, Rule, load_allowlist,
+                   run_analysis)
+from .project import Project, build_project, find_repo_root
+from .rules import ALL_RULES, META_RULES, rules_by_id
+
+__all__ = ["AllowEntry", "Finding", "Report", "Rule", "load_allowlist",
+           "run_analysis", "Project", "build_project", "find_repo_root",
+           "ALL_RULES", "META_RULES", "rules_by_id"]

@@ -1,0 +1,196 @@
+"""kernel-dispatch-complete: the three-file Pallas kernel contract.
+
+Every Pallas kernel in src/repro/kernels/ participates in a three-way
+contract (docs/design.md §7; kernels/ops.py module docstring): the
+kernel module holds the TPU implementation, kernels/ref.py holds the
+pure-jnp reference that *is* the off-TPU numerical contract, and
+kernels/ops.py is the one public dispatch point that picks between
+them. A kernel missing its ref has no testable numerics off-TPU; a
+kernel missing its ops entry invites callers to bypass dispatch; a
+signature drift between the three is exactly the class of bug that only
+surfaces on TPU hardware.
+
+Machine-checked shape of the contract, per public kernel-module
+function that (transitively, within its module) calls
+``pl.pallas_call``:
+
+* ops.py defines a function of the same name;
+* the ops entry's positional parameters match the kernel's (name and
+  order — kernel-tuning keyword-only args like bm/bn/bk are ignored);
+* the ops entry takes keyword-only ``force_pallas`` and ``interpret``;
+* the ops entry calls exactly one ``ref.<fn>`` fallback, which exists
+  in ref.py with the same positional parameters;
+* and (reverse direction) every public ``*_ref`` in ref.py is reachable
+  from some ops entry — an orphan ref is dead contract.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set
+
+from ..core import Finding, Rule
+from ..project import Project, SourceFile
+
+KERNELS_DIR = "src/repro/kernels"
+NON_KERNEL_FILES = {f"{KERNELS_DIR}/__init__.py",
+                    f"{KERNELS_DIR}/ref.py",
+                    f"{KERNELS_DIR}/ops.py"}
+REQUIRED_KWONLY = ("force_pallas", "interpret")
+
+
+def _top_functions(tree: ast.AST) -> Dict[str, ast.FunctionDef]:
+    return {n.name: n for n in tree.body
+            if isinstance(n, ast.FunctionDef)}
+
+
+def _calls_pallas(fn: ast.FunctionDef) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Attribute) and node.attr == "pallas_call":
+            return True
+        if isinstance(node, ast.Name) and node.id == "pallas_call":
+            return True
+    return False
+
+
+def _called_names(fn: ast.FunctionDef) -> Set[str]:
+    out = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+            out.add(node.func.id)
+    return out
+
+
+def _pallas_kernels(tree: ast.AST) -> List[ast.FunctionDef]:
+    """Public top-level fns that reach pallas_call within their module."""
+    fns = _top_functions(tree)
+    direct = {name for name, fn in fns.items() if _calls_pallas(fn)}
+    # one transitive closure over same-module calls (helpers wrapping
+    # the pallas_call for grid/spec setup)
+    reach = set(direct)
+    changed = True
+    while changed:
+        changed = False
+        for name, fn in fns.items():
+            if name not in reach and _called_names(fn) & reach:
+                reach.add(name)
+                changed = True
+    return [fns[n] for n in sorted(reach) if not n.startswith("_")]
+
+
+def _positional(fn: ast.FunctionDef) -> List[str]:
+    return [a.arg for a in fn.args.posonlyargs + fn.args.args]
+
+
+def _kwonly(fn: ast.FunctionDef) -> List[str]:
+    return [a.arg for a in fn.args.kwonlyargs]
+
+
+def _ref_calls(fn: ast.FunctionDef) -> List[str]:
+    """Names called as ``ref.<name>(...)`` inside ``fn``."""
+    out = []
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id == "ref"):
+            out.append(node.func.attr)
+    return out
+
+
+class KernelDispatchComplete(Rule):
+    id = "kernel-dispatch-complete"
+    title = "every Pallas kernel has a ref counterpart and an ops dispatch"
+    rationale = (
+        "kernels/ref.py is the off-TPU numerical contract and "
+        "kernels/ops.py the one dispatch seam (docs/design.md §7); a "
+        "kernel outside that triangle — or drifting from it in "
+        "signature — only fails on TPU hardware.")
+
+    def check(self, project: Project) -> Iterable[Finding]:
+        ops_sf = project.get(f"{KERNELS_DIR}/ops.py")
+        ref_sf = project.get(f"{KERNELS_DIR}/ref.py")
+        kernel_files = [sf for sf in project.iter_files(KERNELS_DIR)
+                        if sf.path not in NON_KERNEL_FILES
+                        and sf.tree is not None]
+        if not kernel_files:
+            return
+        ops_fns = _top_functions(ops_sf.tree) if ops_sf and ops_sf.tree \
+            else {}
+        ref_fns = _top_functions(ref_sf.tree) if ref_sf and ref_sf.tree \
+            else {}
+        used_refs: Set[str] = set()
+
+        for sf in kernel_files:
+            for kern in _pallas_kernels(sf.tree):
+                yield from self._check_kernel(sf, kern, ops_sf, ops_fns,
+                                              ref_sf, ref_fns, used_refs)
+
+        # reverse direction: orphan public refs
+        if ref_sf is not None:
+            for name in sorted(ref_fns):
+                if name.startswith("_"):
+                    continue
+                if name not in used_refs:
+                    yield Finding(
+                        rule=self.id, path=ref_sf.path,
+                        line=ref_fns[name].lineno,
+                        message=f"ref.{name} is not reachable from any "
+                                "ops.py dispatch entry — orphaned "
+                                "reference implementation")
+
+    def _check_kernel(self, sf: SourceFile, kern: ast.FunctionDef,
+                      ops_sf: Optional[SourceFile],
+                      ops_fns: Dict[str, ast.FunctionDef],
+                      ref_sf: Optional[SourceFile],
+                      ref_fns: Dict[str, ast.FunctionDef],
+                      used_refs: Set[str]) -> Iterable[Finding]:
+        name = kern.name
+        entry = ops_fns.get(name)
+        if entry is None:
+            yield Finding(
+                rule=self.id, path=sf.path, line=kern.lineno,
+                message=f"Pallas kernel `{name}` has no ops.py dispatch "
+                        "entry — callers would bind to the TPU "
+                        "implementation directly")
+            return
+        kern_pos = _positional(kern)
+        ops_pos = _positional(entry)
+        if ops_pos != kern_pos:
+            yield Finding(
+                rule=self.id, path=f"{KERNELS_DIR}/ops.py",
+                line=entry.lineno,
+                message=f"ops.{name} positional signature {ops_pos} != "
+                        f"kernel signature {kern_pos} ({sf.path})")
+        missing_kw = [k for k in REQUIRED_KWONLY if k not in _kwonly(entry)]
+        if missing_kw:
+            yield Finding(
+                rule=self.id, path=f"{KERNELS_DIR}/ops.py",
+                line=entry.lineno,
+                message=f"ops.{name} is missing keyword-only "
+                        f"{missing_kw} — every dispatch entry exposes "
+                        "force_pallas/interpret")
+        refs = _ref_calls(entry)
+        if len(set(refs)) != 1:
+            yield Finding(
+                rule=self.id, path=f"{KERNELS_DIR}/ops.py",
+                line=entry.lineno,
+                message=f"ops.{name} must fall back to exactly one "
+                        f"ref.<fn> (found {sorted(set(refs)) or 'none'})")
+            return
+        ref_name = refs[0]
+        used_refs.add(ref_name)
+        ref_fn = ref_fns.get(ref_name)
+        if ref_fn is None:
+            yield Finding(
+                rule=self.id, path=f"{KERNELS_DIR}/ops.py",
+                line=entry.lineno,
+                message=f"ops.{name} falls back to ref.{ref_name}, which "
+                        "does not exist in kernels/ref.py")
+            return
+        ref_pos = _positional(ref_fn)
+        if ref_pos != kern_pos:
+            yield Finding(
+                rule=self.id, path=f"{KERNELS_DIR}/ref.py",
+                line=ref_fn.lineno,
+                message=f"ref.{ref_name} positional signature {ref_pos} != "
+                        f"kernel `{name}` signature {kern_pos}")

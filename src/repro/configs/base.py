@@ -7,9 +7,8 @@ the unit of the dry-run matrix.
 from __future__ import annotations
 
 import dataclasses
-import math
-from dataclasses import dataclass, field
-from typing import Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Optional, Tuple
 
 # Block kinds used in ``block_pattern`` (one scan period).
 ATTN = "attn"
@@ -72,7 +71,10 @@ class ModelConfig:
     @property
     def num_periods(self) -> int:
         p = len(self.pattern)
-        assert self.num_layers % p == 0, (self.name, self.num_layers, p)
+        if self.num_layers % p:
+            raise ValueError(
+                f"{self.name}: num_layers={self.num_layers} is not a "
+                f"multiple of the {p}-block pattern")
         return self.num_layers // p
 
     @property

@@ -169,13 +169,13 @@ class FleetConfig:
                                  f"range for {self.num_workers} workers")
             if spec.worker in seen:
                 raise ValueError(f"worker {spec.worker} has two byzantine "
-                                 f"specs")
+                                 "specs")
             seen.add(spec.worker)
         if len(seen) == self.num_workers and self.num_workers > 1:
             raise ValueError("at least one worker must stay honest")
         if self.topology not in ("star", "gossip"):
             raise ValueError(f"topology {self.topology!r} not in "
-                             f"star|gossip")
+                             "star|gossip")
         if self.gossip is not None and self.topology != "gossip":
             raise ValueError("GossipConfig given but topology is "
                              f"{self.topology!r}")
@@ -191,5 +191,5 @@ class FleetConfig:
             # byte count: fail at construction, not mid-run serialization
             raise ValueError(
                 f"robust filtering supports at most {255 * 8} probes "
-                f"(commit v2 filter-mask length is u8 bytes); got "
+                "(commit v2 filter-mask length is u8 bytes); got "
                 f"{self.n_probes}")

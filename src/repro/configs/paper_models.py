@@ -3,7 +3,7 @@
 These are the faithful-reproduction targets (Tables 1-2, Figs. 2-7) and are
 defined separately from the LM ``ModelConfig`` since they are small convnets.
 """
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Tuple
 
 

@@ -5,10 +5,8 @@ This is the layer the launcher, dry-run, benchmarks and examples consume.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -55,7 +55,8 @@ def partition(params: Dict[str, Any], lane: LaneConfig):
     zo_part = {k: v for k, v in params.items() if k in ZO_GROUPS}
     bp_part = {k: v for k, v in params.items() if k in BP_GROUPS}
     leftover = set(params) - set(zo_part) - set(bp_part)
-    assert not leftover, f"unpartitioned param groups: {leftover}"
+    if leftover:
+        raise ValueError(f"unpartitioned param groups: {sorted(leftover)}")
     return zo_part, bp_part
 
 

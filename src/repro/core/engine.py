@@ -194,7 +194,7 @@ class Fp32Engine(UpdateEngine):
             assert probe_mask.shape == (n,), \
                 (f"probe_mask has shape {probe_mask.shape} but lane "
                  f"{lane.lane!r} runs {n} probes — derive LoopConfig."
-                 f"n_probes from the lane (LoopConfig.for_lane)")
+                 "n_probes from the lane (LoopConfig.for_lane)")
             decay = decay_traced(lane, state.step)
             eta_zo = lane.learning_rate * decay
             eta_tail = base_eta_tail * decay

@@ -17,7 +17,7 @@ The ZO pieces follow Alg. 2 exactly:
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import numpy as np
 

@@ -16,7 +16,6 @@ the same on random logits.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -170,7 +170,7 @@ def parse_byzantine(arg: str) -> tuple:
         bits = part.split(":")
         if len(bits) not in (2, 3):
             raise ValueError(f"byzantine entry {part!r} must be "
-                             f"worker:attack[:amp]")
+                             "worker:attack[:amp]")
         amp = float(bits[2]) if len(bits) == 3 else 0.0
         specs.append(ByzantineSpec(int(bits[0]), bits[1], amp))
     return tuple(specs)

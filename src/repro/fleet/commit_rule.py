@@ -114,8 +114,8 @@ def committed_arrays(commit: Commit, records: Dict[int, Record],
     if cfg is None:
         raise ValueError(
             f"commit {commit.step} is robust-filtered (v2) but the "
-            f"schema carries no RobustConfig — replaying it without the "
-            f"filter semantics that produced it would diverge")
+            "schema carries no RobustConfig — replaying it without the "
+            "filter semantics that produced it would diverge")
     losses = robust.record_losses(records, commit.accepted,
                                   schema.fleet.num_workers)
     decision = robust.filter_decision(deltas, losses, mask, m, cfg,
@@ -123,7 +123,7 @@ def committed_arrays(commit: Commit, records: Dict[int, Record],
     if not np.array_equal(decision.inband, commit.inband(schema.n_probes)):
         raise ValueError(
             f"commit {commit.step}: carried filter mask does not match "
-            f"the deterministic recomputation — corrupt or forged ledger")
+            "the deterministic recomputation — corrupt or forged ledger")
     seeds, deltas, mask = robust.apply_decision(seeds, deltas, mask,
                                                 decision, cfg, m)
     # tail eligibility: loss-consistency IS the tail channel's check —
@@ -225,7 +225,7 @@ def close_step(gate, step: int,
         events.append(f"step {step}: rejected worker {w} ({reason})")
     if result.commit.accepted == 0:
         events.append(f"step {step}: no sound record survived the gate "
-                      f"— empty commit (no-op step)")
+                      "— empty commit (no-op step)")
     return CloseOutcome(result.commit, result.records,
                         ontime_bits, late_admit_bits & ~ontime_bits,
                         tuple(result.rejected), result.outliers, retried,

@@ -330,7 +330,7 @@ def run_gossip_fleet(schema: ReplaySchema, loss_fn: Callable, params,
                     p.reconcile(donor, step)
                 n_reconciles += 1
                 fleet_events.append(f"step {step}: peer {p.id} reconciled "
-                                    f"after partition (from peer "
+                                    "after partition (from peer "
                                     f"{donor.id})")
                 rec_obs.event("reconcile", track="fleet", step=step,
                               peer=p.id, donor=donor.id)
@@ -345,7 +345,7 @@ def run_gossip_fleet(schema: ReplaySchema, loss_fn: Callable, params,
         if not active:
             raise ValueError(
                 f"step {step}: crash/partition schedule left the quorum "
-                f"component empty")
+                "component empty")
         with rec_obs.span("gossip/step", track="fleet", step=step), \
                 rec_obs.memory.region("gossip/step"):
             arrivals = []
@@ -374,8 +374,8 @@ def run_gossip_fleet(schema: ReplaySchema, loss_fn: Callable, params,
                         raise RuntimeError(
                             f"leaderless commit diverged at step {step}: "
                             f"peer {p.id} closed {b!r} vs {wire!r} — the "
-                            f"commit rule is not the pure function it "
-                            f"must be")
+                            "commit rule is not the pure function it "
+                            "must be")
             # explicit retry accounting, once per step (not per peer): the
             # never-empty fallback can pull back a record the transport
             # dropped — the redelivery is real bytes even when the gate
@@ -406,7 +406,7 @@ def run_gossip_fleet(schema: ReplaySchema, loss_fn: Callable, params,
                 p.reconcile(donor, steps)
                 n_reconciles += 1
                 fleet_events.append(f"end: peer {p.id} reconciled after "
-                                    f"run-final heal")
+                                    "run-final heal")
 
     survivors = [p for p in peers if p.alive and p.step == steps]
     if not survivors:

@@ -45,7 +45,6 @@ from typing import Callable, Dict, Optional
 
 import numpy as np
 
-import jax
 import jax.numpy as jnp
 
 from ..configs.base import LaneConfig
@@ -84,8 +83,10 @@ def make_reference_step(loss_fn: Callable, schema: ReplaySchema,
     fleet = schema.fleet
     W, m = fleet.num_workers, fleet.probes_per_worker
     if probe_fn is None:
-        assert schema.numerics == "fp32", \
-            "int8 reference needs the shared make_int8_probe_fn callable"
+        if schema.numerics != "fp32":
+            raise ValueError(
+                "int8 reference needs the shared make_int8_probe_fn "
+                "callable")
         probe_fn = make_probe_fn(loss_fn, lane, schema.partition_fn)
     if quantize_fn is None and schema.numerics == "fp32":
         quantize_fn = make_quantize_fn()
@@ -99,7 +100,9 @@ def make_reference_step(loss_fn: Callable, schema: ReplaySchema,
         model = state.params["model"]
         residuals = state.params["residual"]
         mask = np.asarray(probe_mask, np.float32)
-        assert mask.shape == (W * m,)
+        if mask.shape != (W * m,):
+            raise ValueError(f"probe_mask shape {mask.shape} != "
+                             f"({W * m},) for {W} workers x {m} probes")
 
         records, pendings = {}, {}
         for w in range(W):

@@ -105,8 +105,9 @@ def history_masks(closer: Coordinator,
 def resolve_probe_fns(schema: ReplaySchema, loss_fn, probe_fn):
     """(probe_fn, quantize_fn) for a lane — shared by both topologies."""
     if probe_fn is None:
-        assert schema.numerics == "fp32", \
-            "int8 fleets need a make_int8_probe_fn-built probe_fn"
+        if schema.numerics != "fp32":
+            raise ValueError(
+                "int8 fleets need a make_int8_probe_fn-built probe_fn")
         probe_fn = make_probe_fn(loss_fn, schema.lane, schema.partition_fn)
     quantize_fn = make_quantize_fn() if schema.numerics == "fp32" else None
     return probe_fn, quantize_fn
@@ -173,7 +174,7 @@ def run_fleet(loss_fn: Callable, params, lane: LaneConfig,
                 workers[w].restart(coordinator, step)
                 n_catchups += 1
                 coordinator.events.append(f"step {step}: worker {w} rejoined "
-                                          f"via ledger replay")
+                                          "via ledger replay")
                 rec_obs.event("worker_rejoin", track="fleet", step=step,
                               worker=w)
             for w, until in crash_at.get(step, []):

@@ -56,8 +56,10 @@ def make_probe_fn(loss_fn: Callable, lane: LaneConfig, partition_fn=None):
     """
     if partition_fn is None:
         partition_fn = lambda p: elastic.partition(p, lane)  # noqa: E731
-    assert lane.bp_grad_mode == "avg_perturbed", \
-        "fleet protocol ships Alg. 1 avg_perturbed tail grads"
+    if lane.bp_grad_mode != "avg_perturbed":
+        raise ValueError(
+            "fleet protocol ships Alg. 1 avg_perturbed tail grads, got "
+            f"bp_grad_mode={lane.bp_grad_mode!r}")
 
     def probe_eval(params, batch, step, probe_ids, base_seed):
         zo_part, bp_part = partition_fn(params)
@@ -225,7 +227,10 @@ class Worker:
 
     # ---- live path ----------------------------------------------------- #
     def compute_record(self, step: int, batch) -> Record:
-        assert self.alive and step == self.step, (self.id, step, self.step)
+        if not (self.alive and step == self.step):
+            raise RuntimeError(
+                f"worker {self.id}: compute_record(step={step}) but "
+                f"alive={self.alive}, own step={self.step}")
         rec, self._pending_residual = compute_record(
             self.params, self.residual, batch, step, self.id, self.schema,
             self.probe_fn, self.quantize_fn)
@@ -237,7 +242,10 @@ class Worker:
         the derivation when the caller already holds the canon for this
         commit (a gossip peer's closer applied it once already) — the
         residual/checkpoint protocol below runs either way."""
-        assert self.alive and step == self.step
+        if not (self.alive and step == self.step):
+            raise RuntimeError(
+                f"worker {self.id}: apply_commit(step={step}) but "
+                f"alive={self.alive}, own step={self.step}")
         if new_params is None:
             cstep = committed_arrays(commit, records, self.schema)
             new_params = apply_committed(self.params, step, cstep,

@@ -84,6 +84,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     """
     B, H, Sq, D = q.shape
     Sk = k.shape[2]
+    # reprolint: allow(no-invariant-assert) -- jit-trace-time shape check
     assert Sq % BLOCK_Q == 0 and Sk % BLOCK_K == 0, (Sq, Sk)
     scale = scale if scale is not None else 1.0 / math.sqrt(D)
     grid = (B, H, Sq // BLOCK_Q, Sk // BLOCK_K)
@@ -107,23 +108,3 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
         ],
         interpret=interpret,
     )(q, k, v)
-
-
-def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
-    """Dense-softmax oracle, same layout."""
-    B, H, Sq, D = q.shape
-    Sk = k.shape[2]
-    scale = scale if scale is not None else 1.0 / math.sqrt(D)
-    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
-                   k.astype(jnp.float32)) * scale
-    q_pos = jnp.arange(Sq)[:, None]
-    k_pos = jnp.arange(Sk)[None, :]
-    mask = jnp.ones((Sq, Sk), bool)
-    if causal:
-        mask &= k_pos <= q_pos
-    if window > 0:
-        mask &= k_pos > q_pos - window
-    s = jnp.where(mask[None, None], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("bhqk,bhkd->bhqd", p,
-                      v.astype(jnp.float32)).astype(q.dtype)

@@ -45,6 +45,7 @@ def int8_matmul(a: jax.Array, w: jax.Array, *, bm: int = 128, bn: int = 128,
     """
     M, K = a.shape
     K2, N = w.shape
+    # reprolint: allow(no-invariant-assert) -- jit-trace-time shape check
     assert K == K2 and M % bm == 0 and N % bn == 0 and K % bk == 0, \
         (a.shape, w.shape, bm, bn, bk)
     gm, gn, gk = M // bm, N // bn, K // bk

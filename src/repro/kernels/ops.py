@@ -7,12 +7,11 @@ signature regardless of backend.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
 from . import ref
+from .flash_attn import flash_attention as _pallas_flash_attention
 from .int8_matmul import int8_matmul as _pallas_int8_matmul
 from .paged_attn import paged_attention_step as _pallas_paged_attention_step
 from .topk_mask import topk_topp_mask as _pallas_topk_topp_mask
@@ -27,12 +26,23 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float | None = None, force_pallas: bool = False,
+                    interpret: bool = False):
+    """Online-softmax attention, q/k/v [B,H,S,D] head-major — Pallas on
+    TPU (S must be 128-aligned there), dense-softmax ref elsewhere."""
+    if _on_tpu() or force_pallas:
+        return _pallas_flash_attention(q, k, v, causal=causal, window=window,
+                                       scale=scale, interpret=interpret)
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   scale=scale)
+
+
 def int8_matmul(a, w, *, force_pallas: bool = False, interpret: bool = False):
     """(out int32, maxabs) — Pallas on TPU, ref elsewhere."""
     if _on_tpu() or force_pallas:
         M, K = a.shape
         _, N = w.shape
-        bm = min(128, M) if M % 128 else 128
         if M % 128 or K % 128 or N % 128:
             # pad to MXU alignment; zeros are exact in integer arithmetic
             Mp, Kp, Np = (-(-M // 128) * 128, -(-K // 128) * 128,

@@ -1,12 +1,33 @@
 """Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
 from __future__ import annotations
 
-import numpy as np
+import math
+
 
 import jax
 import jax.numpy as jnp
 
 from ..core import prng
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """Dense-softmax oracle for kernels/flash_attn.py, same layout."""
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
 
 
 def int8_matmul_ref(a: jax.Array, w: jax.Array):

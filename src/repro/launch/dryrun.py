@@ -25,10 +25,9 @@ import traceback
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 from .. import obs
-from ..configs import ARCHS, SHAPES, LaneConfig, cell_matrix, get_arch, get_shape
+from ..configs import LaneConfig, cell_matrix, get_arch, get_shape
 from ..core import api
 from ..core.elastic import TrainState
 from ..sharding.params import cache_shardings, param_shardings
@@ -230,7 +229,8 @@ def main(argv=None):
             else:
                 print(f"SKIP {a} x {s}: {why}")
     else:
-        assert args.arch and args.shape, "--arch/--shape or --all"
+        if not (args.arch and args.shape):
+            raise SystemExit("--arch/--shape or --all")
         cells = [(args.arch, args.shape)]
 
     # small cells first for early signal

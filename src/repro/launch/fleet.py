@@ -38,7 +38,6 @@ from __future__ import annotations
 import argparse
 import sys
 
-import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -106,7 +105,9 @@ def lenet_int8_fleet_setup(bp_tail_layers: int = 1, probes: int = 1,
     from ..core.int8 import quant_from_float
     from ..data.synthetic import glyphs
     from ..models import lenet
-    assert 0 <= bp_tail_layers <= 2, "int8 lane supports 0..2 tail FCs"
+    if not 0 <= bp_tail_layers <= 2:
+        raise ValueError("int8 lane supports 0..2 tail FCs, got "
+                         f"{bp_tail_layers}")
     c = 5 - bp_tail_layers
     tail_fcs = [("fc2", "fc2_in"), ("fc3", "fc3_in")][2 - bp_tail_layers:]
     lane = LaneConfig(lane="elastic_zo_int8", zo_num_probes=probes)
@@ -225,8 +226,8 @@ def main(argv=None):
                           ("--arch", args.arch)):
             if val is not None:
                 ap.error(f"{flag} does not apply to --lane int8 "
-                         f"(integer-only LeNet-5; Alg. 2 knobs live in "
-                         f"LaneConfig.int8_*)")
+                         "(integer-only LeNet-5; Alg. 2 knobs live in "
+                         "LaneConfig.int8_*)")
         params, lane, partition_fn, probe_fn, batch_fn = \
             lenet_int8_fleet_setup(args.bp_tail_layers,
                                    args.probes_per_worker, args.batch,
@@ -294,7 +295,7 @@ def main(argv=None):
 
     failed = False
     if args.lane == "int8" and some_rec.zo_probe_nbytes > 9:
-        obs.log("fleet", f"ERROR int8 ZO probe entry is "
+        obs.log("fleet", "ERROR int8 ZO probe entry is "
                 f"{some_rec.zo_probe_nbytes}B on the wire (> 9B budget)",
                 level="error")
         failed = True

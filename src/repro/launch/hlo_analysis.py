@@ -17,8 +17,8 @@ from __future__ import annotations
 
 import re
 from collections import defaultdict
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
 
 DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
@@ -142,7 +142,6 @@ def collective_bytes(hlo: str) -> Tuple[float, List[CollectiveOp]]:
                 if token not in s and start_token not in s:
                     continue
                 # result type is on the left of ' = '
-                head = s.split(" = ")[0] if " = " in s else ""
                 body = s.split(" = ")[1] if " = " in s else s
                 out_b = _shape_bytes(body.split("(")[0])
                 n = _group_size(s)

@@ -82,7 +82,7 @@ def main(argv=None):
     obs.log("serve",
             f"paged: {n_tok} tokens across {args.batch} requests in "
             f"{dt:.2f}s ({n_tok / dt:.1f} tok/s, {eng.steps_run} engine "
-            f"steps)", tokens=n_tok, wall_s=dt, steps=eng.steps_run)
+            "steps)", tokens=n_tok, wall_s=dt, steps=eng.steps_run)
     obs.log("serve",
             f"pages: peak {util['peak_pages']}/{util['total_pages']} "
             f"({100 * util['peak_util']:.0f}%), mean "

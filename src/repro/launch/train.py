@@ -7,9 +7,7 @@ full production mesh when launched on a TPU slice). For the compile-only
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
-import numpy as np
 
 import jax
 import jax.numpy as jnp

@@ -24,7 +24,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import ModelConfig, pad_to
+from ..configs.base import ModelConfig
 
 Q_CHUNK = 4096          # query block size for chunked attention
 

@@ -5,14 +5,14 @@ the paper's ZO/BP split accounting (ZO-Feat-Cls1 trains 106,936, Cls2
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.paper_models import LeNet5Config
 from ..core.int8 import (QTensor, qconv2d, qdense, qmaxpool2, qrelu,
-                         quant_from_float, rescale_int32)
+                         quant_from_float)
 from .layers import dense_init, subkey
 
 LAYER_NAMES = ("conv1", "conv2", "fc1", "fc2", "fc3")

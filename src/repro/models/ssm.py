@@ -16,8 +16,7 @@ Decode (S=1) uses the exact O(1) recurrence step — no chunking.
 """
 from __future__ import annotations
 
-import math
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -146,7 +145,7 @@ def _wkv_chunked(r, k, v, logw, u, init=None):
         # pad to a chunk multiple: k=v=0 contributes nothing, logw=0 keeps
         # the state (decay 1) — exact
         pad = c - S % c
-        zpad = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        zpad = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))  # noqa: E731
         r, k, v = zpad(r), zpad(k), zpad(v)
         logw = zpad(logw)
         S = S + pad
@@ -276,7 +275,6 @@ def _causal_conv(x, w, b, carry):
 def mamba_block(p, x, cfg: ModelConfig, rules, state):
     """x: [B,S,D]; state: None or dict(conv [B,W-1,di], ssm [B,di,N] fp32)."""
     B, S, D = x.shape
-    di = cfg.ssm_expand * D
     N = cfg.ssm_state_dim
     h = rms_norm(x, p["norm"], cfg.norm_eps)
     xz = jnp.einsum("bsd,de->bse", h, p["in_proj"])
@@ -346,7 +344,7 @@ def _mamba_segment(xdt, dt, A, Bc, Cc, carry):
     S0 = S
     if S % c:
         pad = c - S % c
-        zp = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+        zp = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0)))  # noqa: E731
         xdt, dt, Bc, Cc = zp(xdt), zp(dt), zp(Bc), zp(Cc)
         S = S + pad        # dt=0 -> decay exp(0)=1, contribution 0: exact
     NC = S // c

@@ -11,8 +11,7 @@ depth-2/depth-4 variants to recover exact per-layer costs.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -35,7 +35,7 @@ from __future__ import annotations
 import math
 import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List
 
 from .memory import MemoryLedger, NullMemoryLedger
 

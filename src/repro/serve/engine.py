@@ -89,7 +89,7 @@ class Engine:
             raise ValueError(
                 f"pool of {s.num_pages - 1} usable pages cannot hold one "
                 f"max-length sequence ({worst} pages); raise "
-                f"num_pages or lower max_seq_len")
+                "num_pages or lower max_seq_len")
         self._attn_only = all(k == ATTN for k in cfg.pattern)
 
         dshape = ShapeConfig("serve_decode", seq_len=s.max_seq_len,
@@ -445,7 +445,9 @@ class DenseServer:
     def generate(self, prompts: np.ndarray) -> np.ndarray:
         """prompts [B, Lp] int -> [B, max_new_tokens] int32."""
         cfg, B = self.cfg, self.B
-        assert prompts.shape == (B, self.Lp), prompts.shape
+        if prompts.shape != (B, self.Lp):
+            raise ValueError(f"prompts shape {prompts.shape} != "
+                             f"{(B, self.Lp)}")
         n_img = cfg.num_image_tokens
         batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
         dt = jnp.dtype(cfg.dtype)

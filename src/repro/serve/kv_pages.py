@@ -31,7 +31,10 @@ class PagePool:
     """Free-list page allocator. Page 0 is reserved (null page)."""
 
     def __init__(self, num_pages: int):
-        assert num_pages >= 2, "need at least 1 allocatable page + null page"
+        if num_pages < 2:
+            raise ValueError(
+                f"num_pages={num_pages}: need at least 1 allocatable page "
+                "+ null page")
         self.num_pages = num_pages
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
 
@@ -52,8 +55,10 @@ class PagePool:
 
     def free(self, pages: Sequence[int]) -> None:
         for p in pages:
-            assert p != NULL_PAGE, "null page is not allocatable"
-            assert p not in self._free, f"double free of page {p}"
+            if p == NULL_PAGE:
+                raise ValueError("null page is not allocatable")
+            if p in self._free:
+                raise ValueError(f"double free of page {p}")
             self._free.append(p)
 
 

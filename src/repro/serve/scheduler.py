@@ -376,8 +376,11 @@ class Scheduler:
     def check_invariants(self) -> None:
         live = [p for s in self._admit_order for p in s.pages
                 if p != NULL_PAGE]
-        assert len(live) == len(set(live)), "page double-booked"
-        assert len(live) + self.pool.free_pages == self.serve.num_pages - 1, \
-            "page leak"
+        if len(live) != len(set(live)):
+            raise RuntimeError("page double-booked")
+        if len(live) + self.pool.free_pages != self.serve.num_pages - 1:
+            raise RuntimeError("page leak")
         for i, s in enumerate(self.slots):
-            assert s is None or s.slot == i
+            if s is not None and s.slot != i:
+                raise RuntimeError("slot table corrupt: sequence in "
+                                   f"slot {i} thinks it is in {s.slot}")

@@ -6,7 +6,6 @@ leaves get an extra unsharded leading (layer) axis. See docs/design.md §5.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P

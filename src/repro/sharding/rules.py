@@ -16,7 +16,6 @@ one CPU device.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Optional, Tuple
 

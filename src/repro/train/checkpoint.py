@@ -93,6 +93,7 @@ def _array_manifest(step: int, arrays: Dict[str, np.ndarray],
         "mode": "full",
         # wall-clock metadata stamp: time.time() is right here (and only
         # here) — durations elsewhere use obs.monotonic
+        # reprolint: allow(monotonic-clock) -- wall-clock manifest stamp
         "time": time.time(),
         "keys": list(arrays.keys()),
         "shapes": [list(a.shape) for a in arrays.values()],
@@ -123,6 +124,7 @@ def save_delta(ckpt_dir: str | Path, step: int, base_step: int,
     chains through it; delta-of-delta is deliberately not supported).
     """
     manifest = {"step": int(step), "mode": "delta",
+                # reprolint: allow(monotonic-clock) -- wall-clock manifest stamp
                 "base_step": int(base_step), "time": time.time(),
                 "extra": extra or {}}
     led = obs.get().memory

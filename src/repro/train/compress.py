@@ -13,7 +13,7 @@ unit tests validate the error-feedback contraction property.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,7 @@ masked per-step (core/elastic.py), no remesh needed for a slow host.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

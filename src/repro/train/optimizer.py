@@ -6,7 +6,7 @@ provided for the BP-tail/full-BP lanes; ZO updates live in core/zo.py.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -54,7 +54,7 @@ def adam(lr: Callable[[jax.Array], jax.Array] | float, b1=0.9, b2=0.999,
     lr_fn = lr if callable(lr) else (lambda _: jnp.float32(lr))
 
     def init(params):
-        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
         return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
 
     def update(grads, state, step):

@@ -8,7 +8,7 @@ mesh-independent).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional
 
 import numpy as np
@@ -51,8 +51,8 @@ class LoopConfig:
         lane, so a mismatched manual ``n_probes`` fails loudly at trace
         time; this constructor makes it impossible to mismatch.
         """
-        assert "n_probes" not in kwargs, \
-            "n_probes is derived from lane.zo_num_probes"
+        if "n_probes" in kwargs:
+            raise ValueError("n_probes is derived from lane.zo_num_probes")
         return cls(n_probes=lane.zo_num_probes, **kwargs)
 
 

@@ -1,0 +1,7 @@
+"""Green: the suppression carries its mandatory reason."""
+import time
+
+
+def stamp():
+    # reprolint: allow(monotonic-clock) -- calendar stamp for a manifest
+    return time.time()

@@ -1,0 +1,7 @@
+"""Red: a reasonless suppression — it suppresses nothing and is flagged."""
+import time
+
+
+def stamp():
+    # reprolint: allow(monotonic-clock)
+    return time.time()

@@ -1,0 +1,5 @@
+"""Green: cites a section that exists (docs/design.md §1)."""
+
+
+def f():
+    return 1

@@ -1,0 +1,5 @@
+"""Red: cites a design section that does not exist (docs/design.md §9)."""
+
+
+def f():
+    return 1

@@ -1,0 +1,13 @@
+"""Dispatch seam: one public entry per kernel, ref fallback off-TPU."""
+from . import ref
+from .scale_rows import scale_rows as _pallas_scale_rows
+
+
+def _on_tpu():
+    return False
+
+
+def scale_rows(x, s, *, force_pallas=False, interpret=False):
+    if _on_tpu() or force_pallas:
+        return _pallas_scale_rows(x, s, interpret=interpret)
+    return ref.scale_rows_ref(x, s)

@@ -1,0 +1,5 @@
+"""Pure-jnp oracle matching the kernel's positional signature."""
+
+
+def scale_rows_ref(x, s):
+    return x * s

@@ -1,0 +1,2 @@
+"""Dispatch seam — missing the scale_rows entry."""
+from . import ref  # noqa: F401

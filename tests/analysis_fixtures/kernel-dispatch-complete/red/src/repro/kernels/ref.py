@@ -1,0 +1,1 @@
+"""Reference oracles — missing scale_rows_ref."""

@@ -1,0 +1,8 @@
+"""Green: monotonic clock for durations."""
+import time
+
+
+def timed(fn):
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0

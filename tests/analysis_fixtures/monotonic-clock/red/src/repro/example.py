@@ -1,0 +1,8 @@
+"""Red: time.time() delta — goes negative under NTP steps."""
+import time
+
+
+def timed(fn):
+    t0 = time.time()
+    fn()
+    return time.time() - t0

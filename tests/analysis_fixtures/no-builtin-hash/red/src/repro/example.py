@@ -1,0 +1,5 @@
+"""Red: builtin hash() — salted per process for str, not reproducible."""
+
+
+def bucket_of(key, n):
+    return hash(key) % n

@@ -1,0 +1,7 @@
+"""Green: the invariant raises, so PYTHONOPTIMIZE=1 cannot strip it."""
+
+
+def commit(step, last_step):
+    if step <= last_step:
+        raise RuntimeError(f"commit out of order: {step} <= {last_step}")
+    return step

@@ -1,0 +1,6 @@
+"""Red: a library invariant stated as `assert` (stripped under -O)."""
+
+
+def commit(step, last_step):
+    assert step > last_step, "commit out of order"
+    return step

@@ -1,0 +1,7 @@
+"""Green: the set is sorted before the order-sensitive loop."""
+
+
+def broadcast(transport, peers):
+    dead = {p for p in peers if not transport.alive(p)}
+    for p in sorted(dead):
+        transport.send(p, b"bye")

@@ -1,0 +1,7 @@
+"""Red: set iteration feeding a wire-order-sensitive path."""
+
+
+def broadcast(transport, peers):
+    dead = {p for p in peers if not transport.alive(p)}
+    for p in dead:                       # iteration order varies per process
+        transport.send(p, b"bye")

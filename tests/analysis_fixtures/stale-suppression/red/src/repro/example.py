@@ -1,0 +1,6 @@
+"""Red: the allow matches no finding — stale suppressions are findings."""
+
+
+def f():
+    # reprolint: allow(no-builtin-hash) -- nothing here hashes anymore
+    return 1

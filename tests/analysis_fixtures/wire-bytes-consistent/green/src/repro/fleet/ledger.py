@@ -1,0 +1,6 @@
+"""Seed-ledger wire structs (fixture)."""
+import struct
+
+_REC_HDR = struct.Struct("<BIBBf")   # tag, step, worker, m, loss -> 11 B
+_PROBE = struct.Struct("<Qf")        # seed u64, loss-diff f32    -> 12 B
+_PROBE8 = struct.Struct("<Qb")       # seed u64, ternary g i8     ->  9 B

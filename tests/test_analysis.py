@@ -1,0 +1,186 @@
+"""reprolint (src/repro/analysis): fixtures, engine mechanics, meta-gate.
+
+Three layers:
+
+* every rule is demonstrated by a red/green fixture mini-tree under
+  tests/analysis_fixtures/<rule-id>/ — red must yield at least one
+  finding of that rule, green must be completely clean;
+* engine mechanics: suppression grammar (reason mandatory, trailing vs
+  own-line coverage), allowlist loading errors, stale-entry detection;
+* the meta-gate: reprolint over THIS repository must be clean — zero
+  findings, zero stale suppressions — and the CLI must agree.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (ALL_RULES, AllowEntry, load_allowlist,
+                            rules_by_id, run_analysis)
+from repro.analysis.core import BAD_SUPPRESSION, STALE_SUPPRESSION
+from repro.analysis.project import build_project
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+FIXTURES = REPO_ROOT / "tests" / "analysis_fixtures"
+
+RULE_DIRS = sorted(p.name for p in FIXTURES.iterdir() if p.is_dir())
+
+
+def _run(root: Path, allowlist=()):
+    return run_analysis(root, ALL_RULES, allowlist=list(allowlist))
+
+
+# ------------------------------------------------------------------ #
+# red/green fixtures: every rule demonstrably fires and passes
+# ------------------------------------------------------------------ #
+def test_every_rule_has_a_fixture():
+    meta_ids = {BAD_SUPPRESSION, STALE_SUPPRESSION}
+    assert set(RULE_DIRS) == {r.id for r in ALL_RULES} | meta_ids
+
+
+@pytest.mark.parametrize("rule_id", RULE_DIRS)
+def test_red_fixture_fires(rule_id):
+    report = _run(FIXTURES / rule_id / "red")
+    fired = {f.rule for f in report.findings}
+    assert rule_id in fired, (
+        f"red fixture for {rule_id} produced {sorted(fired)}")
+
+
+@pytest.mark.parametrize("rule_id", RULE_DIRS)
+def test_green_fixture_clean(rule_id):
+    report = _run(FIXTURES / rule_id / "green")
+    assert report.clean, [f"{f.location()}: [{f.rule}] {f.message}"
+                          for f in report.findings]
+
+
+# ------------------------------------------------------------------ #
+# engine mechanics
+# ------------------------------------------------------------------ #
+def _mini_tree(tmp_path: Path, source: str) -> Path:
+    mod = tmp_path / "src" / "repro" / "example.py"
+    mod.parent.mkdir(parents=True)
+    mod.write_text(source)
+    return tmp_path
+
+
+def test_trailing_suppression_covers_its_own_line(tmp_path):
+    root = _mini_tree(tmp_path, (
+        "import time\n"
+        "t = time.time()  # reprolint: allow(monotonic-clock) -- stamp\n"))
+    report = _run(root)
+    assert report.clean
+    assert [f.rule for f in report.suppressed] == ["monotonic-clock"]
+
+
+def test_own_line_suppression_covers_next_line_only(tmp_path):
+    root = _mini_tree(tmp_path, (
+        "import time\n"
+        "# reprolint: allow(monotonic-clock) -- stamp\n"
+        "a = time.time()\n"
+        "b = time.time()\n"))
+    report = _run(root)
+    rules = [f.rule for f in report.findings]
+    assert rules == ["monotonic-clock"]          # line 4 is NOT covered
+    assert [f.line for f in report.findings] == [4]
+
+
+def test_reasonless_suppression_suppresses_nothing(tmp_path):
+    root = _mini_tree(tmp_path, (
+        "import time\n"
+        "# reprolint: allow(monotonic-clock)\n"
+        "t = time.time()\n"))
+    report = _run(root)
+    rules = sorted(f.rule for f in report.findings)
+    assert rules == [BAD_SUPPRESSION, "monotonic-clock"]
+
+
+def test_suppression_for_wrong_rule_is_stale(tmp_path):
+    root = _mini_tree(tmp_path, (
+        "import time\n"
+        "# reprolint: allow(no-builtin-hash) -- wrong rule id\n"
+        "t = time.time()\n"))
+    report = _run(root)
+    rules = sorted(f.rule for f in report.findings)
+    assert rules == ["monotonic-clock", STALE_SUPPRESSION]
+
+
+def test_allowlist_discharges_and_goes_stale(tmp_path):
+    root = _mini_tree(tmp_path, "import time\nt = time.time()\n")
+    entry = AllowEntry(rule="monotonic-clock", path="src/repro/example.py",
+                       reason="fixture")
+    report = _run(root, allowlist=[entry])
+    assert report.clean and len(report.suppressed) == 1
+
+    stale = AllowEntry(rule="no-builtin-hash", path="src/repro/example.py",
+                       reason="matches nothing")
+    report = _run(root, allowlist=[entry, stale])
+    assert [f.rule for f in report.findings] == [STALE_SUPPRESSION]
+    assert ".reprolint.json" in report.findings[0].path
+
+
+def test_allowlist_loader_rejects_missing_reason(tmp_path):
+    (tmp_path / ".reprolint.json").write_text(json.dumps(
+        {"allow": [{"rule": "no-builtin-hash", "path": "x.py"}]}))
+    with pytest.raises(ValueError, match="reason"):
+        load_allowlist(tmp_path)
+
+
+def test_allowlist_loader_rejects_empty_reason(tmp_path):
+    (tmp_path / ".reprolint.json").write_text(json.dumps(
+        {"allow": [{"rule": "r", "path": "p", "reason": "  "}]}))
+    with pytest.raises(ValueError, match="empty reason"):
+        load_allowlist(tmp_path)
+
+
+def test_parse_error_is_a_finding(tmp_path):
+    root = _mini_tree(tmp_path, "def broken(:\n")
+    report = _run(root)
+    assert [f.rule for f in report.findings] == ["parse-error"]
+
+
+def test_project_excludes_fixture_trees():
+    project = build_project(REPO_ROOT)
+    assert not [sf.path for sf in project.iter_files()
+                if sf.path.startswith("tests/analysis_fixtures")]
+
+
+def test_rules_by_id_covers_all_rules():
+    by_id = rules_by_id()
+    for rule in ALL_RULES:
+        assert by_id[rule.id] is rule
+
+
+# ------------------------------------------------------------------ #
+# the meta-gate: this repository is clean under its own linter
+# ------------------------------------------------------------------ #
+def test_repo_is_reprolint_clean():
+    report = run_analysis(REPO_ROOT, ALL_RULES)
+    assert report.clean, "\n".join(
+        f"{f.location()}: [{f.rule}] {f.message}" for f in report.findings)
+    # the committed suppressions are exercised, not decorative
+    assert report.suppressed, "expected grandfathered suppressions in use"
+
+
+def test_cli_clean_on_repo_and_writes_report(tmp_path):
+    out = tmp_path / "reprolint.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--root", str(REPO_ROOT),
+         "--report", str(out)],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO_ROOT / "src"), "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    doc = json.loads(out.read_text())
+    assert doc["tool"] == "reprolint" and doc["clean"] is True
+    assert len(doc["rules"]) >= 8
+
+
+def test_cli_exits_nonzero_on_findings():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--root",
+         str(FIXTURES / "no-invariant-assert" / "red")],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO_ROOT / "src"), "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 1
+    assert "no-invariant-assert" in proc.stdout

@@ -1,10 +1,8 @@
 """Checkpoint/restore, elastic resharding, and restart determinism."""
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import LaneConfig
 from repro.core.elastic import TrainState, make_elastic_step

@@ -8,7 +8,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import prng, zo
 from repro.core.int8 import psr_shift, bitwidth
-from repro.core.int_loss import int_loss_sign, float_loss
+from repro.core.int_loss import int_loss_sign
 from repro.core.int8 import QTensor
 
 

@@ -3,7 +3,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.flash_attn import flash_attention, flash_attention_ref
+from repro.kernels.flash_attn import flash_attention
+from repro.kernels.ref import flash_attention_ref
 
 
 @pytest.mark.parametrize("B,H,Sq,Sk,D,causal,win", [

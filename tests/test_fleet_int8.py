@@ -18,7 +18,7 @@ from repro.core.elastic import TrainState
 from repro.core.elastic_int8 import make_int8_elastic_step
 from repro.core.int8 import quant_from_float
 from repro.data.synthetic import glyphs
-from repro.fleet import (Ledger, make_int8_probe_fn, make_reference_step,
+from repro.fleet import (make_int8_probe_fn, make_reference_step,
                          make_replay_fn, reference_state, run_fleet)
 from repro.models import lenet
 from repro.train import checkpoint as ckpt

@@ -4,7 +4,6 @@ Contract: integer kernels are bitwise-exact; the fp perturb kernel has a
 bitwise-identical z stream and an AXPY within 1 ulp (FMA contraction
 differences between the interpreter and jit).
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

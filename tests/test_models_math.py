@@ -5,10 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # optional dep: suite must collect without it
-from hypothesis import given, settings, strategies as st
 
-from repro.configs import ARCHS, LaneConfig, ShapeConfig, reduced
+from repro.configs import ARCHS, reduced
 from repro.models import ssm
 from repro.models.layers import rope
 from repro.models.moe import capacity, moe_ffn, init_moe

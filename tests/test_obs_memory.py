@@ -12,7 +12,6 @@ import json
 
 import pytest
 
-import jax
 import jax.numpy as jnp
 
 from repro import obs

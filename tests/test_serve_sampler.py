@@ -8,7 +8,7 @@ from repro.serve.sampler import sample_tokens
 
 def _call(logits, temperature=1.0, top_k=0, top_p=1.0, seed=0, step=0):
     B = logits.shape[0]
-    full = lambda v, dt: jnp.full((B,), v, dt)
+    full = lambda v, dt: jnp.full((B,), v, dt)  # noqa: E731
     return np.asarray(sample_tokens(
         jnp.asarray(logits, jnp.float32), full(temperature, jnp.float32),
         full(top_k, jnp.int32), full(top_p, jnp.float32),

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import LaneConfig
 from repro.core import prng, zo
@@ -44,7 +43,7 @@ def test_seed_replay_identical():
 def test_spsa_unbiased_direction():
     """E[g z] ~ grad: the SPSA estimate correlates with the true gradient."""
     params, batch = make_quad(jax.random.key(1))
-    loss = lambda p: quad_loss(p, batch)
+    loss = lambda p: quad_loss(p, batch)  # noqa: E731
     true_grad = jax.grad(loss)(params)["w"]["w"]
     acc = jnp.zeros_like(true_grad)
     n = 300
